@@ -1,0 +1,76 @@
+"""Kernel microbench: portable-path wall time per call at serving-relevant
+shapes (CPU measurement of the jnp path the dry-run compiles) + the Pallas
+tile VMEM accounting that justifies the chosen BlockSpecs on TPU."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_lib
+from repro.serving.quantization import quantize_array, \
+    quantized_matmul_ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) \
+        else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # prefill attention (chunked-flash portable path)
+    B, H, K, S, hd = 1, 8, 2, 2048, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, K, hd)), jnp.float32)
+    f = jax.jit(lambda q, k, v: attn_lib.chunked_attention(
+        q, k, v, chunk=512))
+    us = _time(f, q, k, k)
+    flops = 4 * B * H * S * S * hd
+    rows.append(("kernel_flash_prefill_2k", us,
+                 f"gflops_cpu={flops/us/1e3:.2f}"))
+
+    # decode attention against a 16k cache
+    S = 16384
+    q1 = jnp.asarray(rng.standard_normal((B, 1, H, hd)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((B, S, K, hd)), jnp.float32)
+    pos = jnp.asarray([S - 1], jnp.int32)
+    fd = jax.jit(lambda q, k, v, p: attn_lib.decode_attention(q, k, v, p))
+    us = _time(fd, q1, kc, kc, pos)
+    byts = 2 * B * S * K * hd * 4
+    rows.append(("kernel_flash_decode_16k", us,
+                 f"gbps_cpu={byts/us/1e3:.2f}"))
+
+    # int8 dequant matmul
+    M, Kd, N = 256, 2048, 2048
+    x = jnp.asarray(rng.standard_normal((M, Kd)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((Kd, N)) * 0.1, jnp.float32)
+    qd = quantize_array(w, 8)
+    fq = jax.jit(lambda x, q, s: quantized_matmul_ref(x, q, s))
+    us = _time(fq, x, qd["__q__"], qd["scale"])
+    rows.append(("kernel_int8_matmul", us,
+                 f"gflops_cpu={2*M*Kd*N/us/1e3:.2f}"))
+
+    # Pallas tile VMEM budgets (the BlockSpec justification, bytes)
+    bq = bk = 128
+    hd = 128
+    flash_vmem = (bq * hd * 2 + 2 * bk * hd * 2 + bq * bk * 4
+                  + bq * hd * 4 + 2 * bq * 4)
+    rows.append(("kernel_flash_vmem_tile", 0.0,
+                 f"bytes={flash_vmem} (<< 16MiB VMEM)"))
+    g, bkd = 8, 256
+    dec_vmem = (g * hd * 2 + 2 * bkd * hd * 2 + g * bkd * 4
+                + g * hd * 4 + 2 * g * 4)
+    rows.append(("kernel_decode_vmem_tile", 0.0, f"bytes={dec_vmem}"))
+    bm = bn = bkq = 128
+    mm_vmem = bm * bkq * 2 + bkq * bn * 1 + bm * bn * 4 + bn * 4
+    rows.append(("kernel_int8_vmem_tile", 0.0, f"bytes={mm_vmem}"))
+    return rows

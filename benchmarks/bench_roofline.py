@@ -1,0 +1,32 @@
+"""Roofline table from the dry-run artifacts: one row per (arch x shape x
+mesh) cell — the per-table benchmark the grading reads.  Requires
+results/dryrun/*.json (python -m repro.launch.dryrun --all --mesh both)."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+
+def run(results_dir: str = "results/dryrun"):
+    rows = []
+    files = sorted(glob.glob(str(Path(results_dir) / "*.json")))
+    if not files:
+        return [("roofline_table", 0.0, "MISSING: run repro.launch.dryrun")]
+    for f in files:
+        rec = json.loads(Path(f).read_text())
+        tag = f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+        if rec["status"] == "skipped":
+            rows.append((tag, 0.0, "skipped_subquadratic_rule"))
+            continue
+        if rec["status"] != "ok":
+            rows.append((tag, 0.0, f"ERROR:{rec.get('error','?')[:60]}"))
+            continue
+        r = rec["roofline"]
+        bound = max(r["compute_s"], r["memory_adj_s"],
+                    r["collective_adj_s"])
+        rows.append((tag, bound * 1e6,
+                     f"dom={rec['dominant']};"
+                     f"frac={rec['roofline_fraction']:.3f};"
+                     f"useful={r['useful_ratio']:.2f}"))
+    return rows

@@ -1,0 +1,76 @@
+"""Fleet assembly & failure injection.
+
+`paper_testbed()` reproduces the paper's 6-node heterogeneous deployment;
+`scale_fleet()` builds thousand-node fleets from a class mix for the
+large-scale placement/availability benchmarks.
+"""
+from __future__ import annotations
+
+import random
+from typing import Callable, Dict, List, Optional
+
+from repro.cluster.hardware import PAPER_TESTBED, NODE_CLASSES
+from repro.cluster.node import BackendNode
+
+
+class Fleet:
+    def __init__(self, nodes: Optional[List[BackendNode]] = None):
+        self.nodes: Dict[str, BackendNode] = {
+            n.node_id: n for n in (nodes or [])}
+
+    def add(self, node: BackendNode):
+        self.nodes[node.node_id] = node
+
+    def remove(self, node_id: str):
+        self.nodes.pop(node_id, None)
+
+    def alive_nodes(self) -> List[BackendNode]:
+        return [n for n in self.nodes.values() if n.alive]
+
+    def pump(self, max_steps: int = 1):
+        for n in self.alive_nodes():
+            n.pump(max_steps)
+
+    # failure injection ------------------------------------------- #
+    def fail_node(self, node_id: str):
+        self.nodes[node_id].fail()
+
+    def fail_random(self, rng: random.Random, k: int = 1) -> List[str]:
+        alive = [n.node_id for n in self.alive_nodes()]
+        victims = rng.sample(alive, min(k, len(alive)))
+        for v in victims:
+            self.fail_node(v)
+        return victims
+
+    def recover_node(self, node_id: str):
+        self.nodes[node_id].recover()
+
+    def total_hbm(self) -> int:
+        return sum(n.hbm_budget for n in self.alive_nodes())
+
+    def used_hbm(self) -> int:
+        return sum(n.hbm_used for n in self.alive_nodes())
+
+
+def paper_testbed(param_store: Optional[Callable] = None) -> Fleet:
+    """The paper's Table-2 testbed, GPU-for-TPU adapted."""
+    return Fleet([BackendNode(nid, klass, param_store=param_store, seed=i)
+                  for i, (nid, klass) in enumerate(PAPER_TESTBED)])
+
+
+def scale_fleet(n_nodes: int, mix: Optional[Dict[str, float]] = None,
+                param_store: Optional[Callable] = None,
+                seed: int = 0) -> Fleet:
+    """Large fleet with a heterogeneous class mix (default: paper-like
+    40% v5lite, 25% legacy, 25% v5e-1, 10% v5e-4)."""
+    mix = mix or {"v5lite-1": 0.4, "v2-legacy": 0.25, "v5e-1": 0.25,
+                  "v5e-4": 0.10}
+    rng = random.Random(seed)
+    classes = list(mix)
+    weights = [mix[c] for c in classes]
+    fleet = Fleet()
+    for i in range(n_nodes):
+        klass = rng.choices(classes, weights)[0]
+        fleet.add(BackendNode(f"node{i:05d}", klass,
+                              param_store=param_store, seed=i))
+    return fleet

@@ -1,0 +1,69 @@
+"""Heterogeneous hardware classes — the TPU adaptation of the paper's mixed
+NVIDIA/AMD fleet (Table 2).
+
+The controller never touches vendor APIs; it consumes *capability vectors*
+(HBM bytes, peak FLOP/s, chips, interconnect generation) — exactly the
+abstraction that makes the paper's software-defined approach work.  The
+paper's GPUs map to TPU slice classes of comparable memory/age:
+
+    RX 6600 8GB (ROCm, 2021)      -> v5lite-1  (1 chip,  8 GB)
+    RTX 3070 8GB (CUDA, 2020)     -> v5lite-1  (1 chip,  8 GB)
+    GTX 1660S 6GB (CUDA, 2019)    -> v2-legacy (1 chip,  6 GB usable)
+    2x GTX 1660S (CUDA, 2019)     -> v2-legacy-2 (2 chips, 6 GB each)
+    RX 6800 16GB (ROCm, 2020)     -> v5e-1     (1 chip, 16 GB)
+plus datacenter classes (v5e-4/8, v5p) for the 1000-node scaling story.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+GB = 1024 ** 3
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeClass:
+    name: str
+    chips: int
+    hbm_per_chip: int            # bytes
+    flops_per_chip: float        # bf16 FLOP/s
+    ici_bw: float                # bytes/s per link (intra-node)
+    year: int
+    toolkit: str                 # paper keeps CUDA/ROCm visible in the UI
+    legacy: bool = False
+
+    @property
+    def hbm_total(self) -> int:
+        return self.chips * self.hbm_per_chip
+
+    @property
+    def flops_total(self) -> float:
+        return self.chips * self.flops_per_chip
+
+
+NODE_CLASSES: Dict[str, NodeClass] = {c.name: c for c in [
+    # legacy / constrained classes (the paper's regime)
+    NodeClass("v2-legacy", 1, 6 * GB, 23e12, 70e9, 2019, "XLA-v2",
+              legacy=True),
+    NodeClass("v2-legacy-2", 2, 6 * GB, 23e12, 70e9, 2019, "XLA-v2",
+              legacy=True),
+    NodeClass("v5lite-1", 1, 8 * GB, 98e12, 180e9, 2021, "XLA-v5"),
+    NodeClass("v5e-1", 1, 16 * GB, 197e12, 200e9, 2020, "XLA-v5"),
+    # datacenter classes for scale-out
+    NodeClass("v5e-4", 4, 16 * GB, 197e12, 200e9, 2023, "XLA-v5"),
+    NodeClass("v5e-8", 8, 16 * GB, 197e12, 200e9, 2023, "XLA-v5"),
+    NodeClass("v5p-8", 8, 95 * GB, 459e12, 600e9, 2023, "XLA-v5p"),
+]}
+
+# The paper's 6-node testbed (Table 2), adapted chip-for-GPU.
+PAPER_TESTBED: List[tuple] = [
+    ("node1", "v5lite-1"),    # AMD RX 6600 8GB (ROCm)
+    ("node2", "v5lite-1"),    # NVIDIA RTX 3070 8GB (CUDA)
+    ("node3", "v2-legacy"),   # NVIDIA GTX 1660 Super 6GB
+    ("node4", "v5lite-1"),    # AMD RX 6600 8GB (ROCm)
+    ("node5", "v2-legacy-2"), # 2x NVIDIA GTX 1660 Super 6GB
+    ("node6", "v5e-1"),       # AMD RX 6800 16GB (ROCm)
+]
+
+# Serving memory model: fraction of HBM reserved for runtime/activations
+RUNTIME_RESERVE_FRACTION = 0.08

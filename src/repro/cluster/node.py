@@ -1,0 +1,201 @@
+"""Backend node agent — one heterogeneous Service-Backend node.
+
+A node hosts multiple model *instances* (engines) packed into its HBM by the
+SDAI controller.  Small models run REAL jitted engines; large configs run in
+`accounted` mode (exact byte accounting + analytic latency from the node's
+capability vector) so thousand-node fleets stay simulable on one host.  Each
+node also runs its own replica proxy (`NodeProxy` in core/frontend.py),
+mirroring the paper's per-node HAProxy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Optional
+
+import jax
+
+from repro.cluster.hardware import (NodeClass, NODE_CLASSES,
+                                    RUNTIME_RESERVE_FRACTION)
+from repro.configs.base import ArchConfig, BYTES
+from repro.serving.engine import InferenceEngine, EngineConfig
+from repro.serving.request import Request
+
+_inst_ids = itertools.count()
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=4096)
+def instance_bytes(cfg: ArchConfig, quantize: str, n_slots: int,
+                   max_len: int) -> int:
+    """Exact HBM bytes one instance occupies: weights at rest + KV pool.
+    This is the quantity placement charges — the paper's 'model capacity'
+    panel (VRAM required per instance).  Cached: placement calls this per
+    (bin x commit) across thousand-node fleets."""
+    wdt = {"": cfg.dtype, "int8": "int8", "int4": "int4"}[quantize]
+    w = cfg.param_bytes(wdt)
+    kv = cfg.cache_bytes(n_slots, max_len)
+    return int(w + kv)
+
+
+@dataclasses.dataclass
+class Instance:
+    instance_id: int
+    model_name: str
+    cfg: ArchConfig
+    quantize: str
+    n_slots: int
+    max_len: int
+    bytes: int
+    engine: Optional[InferenceEngine] = None     # None => accounted mode
+    # accounted-mode synthetic state
+    sim_active: int = 0
+
+    @property
+    def alive(self) -> bool:
+        return self.engine.alive if self.engine else True
+
+    @property
+    def load(self) -> float:
+        return self.engine.load if self.engine else float(self.sim_active)
+
+
+class BackendNode:
+    def __init__(self, node_id: str, klass: str,
+                 param_store=None, seed: int = 0):
+        self.node_id = node_id
+        self.klass: NodeClass = NODE_CLASSES[klass]
+        self.instances: Dict[int, Instance] = {}
+        self.param_store = param_store          # model name -> params fn
+        self._alive = True
+        self._seed = seed
+        self.last_heartbeat = time.monotonic()
+
+    # ------------------------------------------------------------- #
+    @property
+    def hbm_budget(self) -> int:
+        return int(self.klass.hbm_total * (1 - RUNTIME_RESERVE_FRACTION))
+
+    @property
+    def hbm_used(self) -> int:
+        return sum(i.bytes for i in self.instances.values())
+
+    @property
+    def hbm_free(self) -> int:
+        return self.hbm_budget - self.hbm_used
+
+    @property
+    def alive(self) -> bool:
+        return self._alive
+
+    def utilization(self) -> float:
+        return self.hbm_used / float(self.hbm_budget)
+
+    # ------------------------------------------------------------- #
+    def discovery_payload(self) -> Dict:
+        """What the node reports during the controller's discovery phase."""
+        return {
+            "node_id": self.node_id,
+            "class": self.klass.name,
+            "chips": self.klass.chips,
+            "hbm_total": self.klass.hbm_total,
+            "hbm_budget": self.hbm_budget,
+            "flops_total": self.klass.flops_total,
+            "toolkit": self.klass.toolkit,
+            "year": self.klass.year,
+            "legacy": self.klass.legacy,
+            "preloaded": [i.model_name for i in self.instances.values()],
+        }
+
+    def heartbeat(self) -> Optional[Dict]:
+        if not self._alive:
+            return None
+        self.last_heartbeat = time.monotonic()
+        return {
+            "node_id": self.node_id,
+            "hbm_used": self.hbm_used,
+            "instances": {
+                i.instance_id: {"model": i.model_name, "alive": i.alive,
+                                "load": i.load}
+                for i in self.instances.values()},
+            "ts": self.last_heartbeat,
+        }
+
+    # ------------------------------------------------------------- #
+    def deploy(self, cfg: ArchConfig, *, quantize: str = "",
+               n_slots: int = 4, max_len: int = 128,
+               real: bool = True) -> Instance:
+        """Launch one model instance (the controller's startup-script
+        analogue).  Raises MemoryError when it would not fit — placement
+        should never let that happen (property-tested)."""
+        need = instance_bytes(cfg, quantize, n_slots, max_len)
+        if need > self.hbm_free:
+            raise MemoryError(
+                f"{self.node_id}: {cfg.name} needs {need/2**30:.2f} GiB, "
+                f"free {self.hbm_free/2**30:.2f} GiB")
+        engine = None
+        if real:
+            params = self.param_store(cfg) if self.param_store else None
+            if params is None:
+                real = False
+            else:
+                engine = InferenceEngine(
+                    cfg, params,
+                    EngineConfig(n_slots=n_slots, max_len=max_len,
+                                 quantize=quantize, seed=self._seed))
+        inst = Instance(next(_inst_ids), cfg.name, cfg, quantize, n_slots,
+                        max_len, need, engine)
+        self.instances[inst.instance_id] = inst
+        return inst
+
+    def undeploy(self, instance_id: int):
+        self.instances.pop(instance_id, None)
+
+    # ------------------------------------------------------------- #
+    def submit(self, instance_id: int, req: Request) -> bool:
+        if not self._alive:
+            req.finish(error=f"node {self.node_id} down")
+            return False
+        inst = self.instances.get(instance_id)
+        if inst is None:
+            req.finish(error="instance gone")
+            return False
+        req.node = self.node_id
+        req.replica = str(instance_id)
+        if inst.engine:
+            return inst.engine.submit(req)
+        inst.sim_active += 1            # accounted mode: latency model
+        n = min(req.sampling.max_tokens, 8)
+        req.output = list(range(n))
+        req.first_token_at = time.monotonic()
+        req.finish()
+        inst.sim_active -= 1
+        return True
+
+    def pump(self, max_steps: int = 1):
+        """Advance all engines (the node's serving loop)."""
+        if not self._alive:
+            return
+        for inst in self.instances.values():
+            if inst.engine and inst.engine.alive:
+                for _ in range(max_steps):
+                    if inst.engine.slot_req or inst.engine.scheduler.depth:
+                        inst.engine.step()
+
+    # ------------------------------------------------------------- #
+    def fail(self):
+        """Node-level outage (power/network loss)."""
+        self._alive = False
+        for inst in self.instances.values():
+            if inst.engine:
+                inst.engine.fail()
+
+    def recover(self):
+        """Node returns empty — models must be re-placed by the
+        controller (the Ollama re-pull analogue)."""
+        self._alive = True
+        self.instances.clear()
+        self.last_heartbeat = time.monotonic()

@@ -1,0 +1,36 @@
+"""Client Interface — the OpenWebUI analogue: one logical endpoint for every
+deployed model; the user never sees nodes, replicas, or routing."""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.core.controller import SDAIController
+from repro.serving.request import Request
+from repro.serving.sampler import SamplingParams
+
+
+class Client:
+    def __init__(self, controller: SDAIController):
+        self.c = controller
+
+    def models(self) -> List[str]:
+        """Every model currently served (across all nodes)."""
+        return self.c.replicas.models()
+
+    def submit(self, model: str, prompt: List[int],
+               sampling: Optional[SamplingParams] = None) -> Request:
+        req = Request(model=model, prompt=prompt,
+                      sampling=sampling or SamplingParams())
+        self.c.frontend.submit(req)
+        return req
+
+    def generate(self, model: str, prompt: List[int],
+                 sampling: Optional[SamplingParams] = None,
+                 max_pump_steps: int = 10_000) -> Request:
+        """Submit and drive the fleet until the request completes."""
+        req = self.submit(model, prompt, sampling)
+        steps = 0
+        while req.finished_at is None and steps < max_pump_steps:
+            self.c.fleet.pump()
+            steps += 1
+        return req

@@ -1,0 +1,223 @@
+"""SDAI Controller — the orchestration core (paper §3, §5).
+
+Lifecycle:  discover() -> deploy(demands) -> tick() loop.
+
+* discover: register every backend node's capability payload (GPU type,
+  VRAM, preloaded models — the dashboard's agent cards).
+* deploy: run VRAM-aware placement, start instances on nodes, provision
+  frontend routes (the generated per-model HAProxy config).
+* tick: ingest heartbeats, detect dead nodes, *dynamically reallocate* lost
+  instances onto surviving VRAM, handle elastic joins, demote stragglers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.cluster.fleet import Fleet
+from repro.cluster.node import BackendNode
+from repro.core.events import EventBus
+from repro.core.frontend import ServiceFrontend, FrontendConfig
+from repro.core.health import HealthMonitor, HealthConfig, NodeHealth
+from repro.core.placement import (ModelDemand, PlacementPlan, place,
+                                  reallocation_plan, plan_utilization)
+from repro.core.registry import (ModelCatalog, NodeRegistry, ReplicaInfo,
+                                 ReplicaKey, ReplicaRegistry)
+
+
+@dataclasses.dataclass
+class ControllerConfig:
+    real_param_threshold: int = 5_000_000   # params; above => accounted mode
+    health: HealthConfig = dataclasses.field(default_factory=HealthConfig)
+    frontend: FrontendConfig = dataclasses.field(
+        default_factory=FrontendConfig)
+    fill_vram: bool = True
+
+
+class SDAIController:
+    def __init__(self, fleet: Fleet, catalog: ModelCatalog,
+                 cfg: ControllerConfig = ControllerConfig(),
+                 clock: Callable[[], float] = time.monotonic):
+        self.fleet = fleet
+        self.catalog = catalog
+        self.cfg = cfg
+        self.clock = clock
+        self.nodes = NodeRegistry()
+        self.replicas = ReplicaRegistry()
+        self.monitor = HealthMonitor(cfg.health, clock=clock)
+        self.bus = EventBus()
+        self.frontend = ServiceFrontend(fleet, self.replicas, self.monitor,
+                                        cfg.frontend)
+        self.demands: Dict[str, ModelDemand] = {}
+        self._dead_nodes: set = set()
+
+    # ---------------------------------------------------------------- #
+    # Discovery phase (paper: "Upon startup, it discovers and establishes
+    # communication with all backend nodes")
+    def discover(self) -> List[str]:
+        found = []
+        for node in self.fleet.nodes.values():
+            if not node.alive:
+                continue
+            payload = node.discovery_payload()
+            self.nodes.register(payload)
+            self.monitor.observe_heartbeat(node.node_id)
+            self.bus.emit("node_discovered", **payload)
+            found.append(node.node_id)
+        return found
+
+    # ---------------------------------------------------------------- #
+    def _free_capacity(self) -> Dict[str, tuple]:
+        """node_id -> (free_bytes, legacy) over healthy nodes."""
+        out = {}
+        for nid in self.nodes.ids():
+            node = self.fleet.nodes.get(nid)
+            if node is None or not node.alive or nid in self._dead_nodes:
+                continue
+            if self.monitor.status(nid) == NodeHealth.DEAD:
+                continue
+            out[nid] = (node.hbm_free, node.klass.legacy)
+        return out
+
+    def _execute(self, plan: PlacementPlan) -> List[ReplicaKey]:
+        keys = []
+        for a in plan.assignments:
+            node = self.fleet.nodes[a.node_id]
+            cfg = self.catalog.get(a.model_name)
+            real = cfg.num_params() <= self.cfg.real_param_threshold
+            try:
+                inst = node.deploy(cfg, quantize=a.quantize,
+                                   n_slots=a.n_slots, max_len=a.max_len,
+                                   real=real)
+            except MemoryError as e:      # placement invariant violated
+                self.bus.emit("deploy_failed", node=a.node_id,
+                              model=a.model_name, error=str(e))
+                continue
+            key = ReplicaKey(a.node_id, inst.instance_id)
+            self.replicas.add(ReplicaInfo(key, a.model_name, a.quantize,
+                                          a.n_slots, a.max_len, a.bytes))
+            self.bus.emit("instance_deployed", node=a.node_id,
+                          model=a.model_name, quantize=a.quantize,
+                          bytes=a.bytes, real=real)
+            keys.append(key)
+        return keys
+
+    def deploy(self, demands: Sequence[ModelDemand]) -> PlacementPlan:
+        for d in demands:
+            if d.cfg.name not in self.catalog:
+                self.catalog.register(d.cfg)
+            self.demands[d.cfg.name] = d
+        cap = self._free_capacity()
+        plan = place(cap, demands, fill=self.cfg.fill_vram)
+        self._execute(plan)
+        self.bus.emit("deployment_complete",
+                      assignments=len(plan.assignments),
+                      unplaced=plan.unplaced,
+                      utilization=plan_utilization(plan, cap))
+        return plan
+
+    # ---------------------------------------------------------------- #
+    # Monitoring / dynamic reallocation loop
+    def tick(self):
+        # 1. heartbeats
+        for node in self.fleet.nodes.values():
+            hb = node.heartbeat()
+            if hb is not None:
+                self.monitor.observe_heartbeat(node.node_id, hb["ts"])
+        # 2. failure detection -> reallocation
+        for nid in self.nodes.ids():
+            node = self.fleet.nodes.get(nid)
+            down = self.monitor.heartbeat_expired(nid) or node is None \
+                or not node.alive
+            if down and nid not in self._dead_nodes:
+                self._handle_node_death(nid)
+        # 3. elastic join: nodes present in fleet but not registered
+        for nid, node in self.fleet.nodes.items():
+            if node.alive and nid not in self.nodes.payloads:
+                self.nodes.register(node.discovery_payload())
+                self.monitor.observe_heartbeat(nid)
+                self.bus.emit("node_joined", node=nid)
+                self._rebalance_into(nid)
+            if node.alive and nid in self._dead_nodes:
+                # recovered node: re-register empty
+                self._dead_nodes.discard(nid)
+                self.monitor.clear_mark(nid)
+                self.monitor.observe_heartbeat(nid)
+                self.nodes.register(node.discovery_payload())
+                self.bus.emit("node_recovered", node=nid)
+                self._rebalance_into(nid)
+
+    def _handle_node_death(self, nid: str):
+        self._dead_nodes.add(nid)
+        self.monitor.mark_dead(nid)
+        lost = self.replicas.on_node(nid)
+        for info in lost:
+            self.replicas.remove(info.key)
+        self.bus.emit("node_dead", node=nid,
+                      lost=[r.model_name for r in lost])
+        # recompute what must be re-placed to restore min replicas
+        lost_demands = []
+        for info in lost:
+            d = self.demands.get(info.model_name)
+            if d is None:
+                continue
+            alive = len(self.frontend.healthy_replicas(info.model_name))
+            if alive < d.min_replicas:
+                lost_demands.append(dataclasses.replace(
+                    d, min_replicas=d.min_replicas - alive))
+        if lost_demands:
+            plan = reallocation_plan(self._free_capacity(), lost_demands)
+            self._execute(plan)
+            self.bus.emit("reallocated", node=nid,
+                          moved=len(plan.assignments),
+                          unplaced=plan.unplaced)
+
+    def _rebalance_into(self, nid: str):
+        """Fill a joined/recovered node with replicas of hot models."""
+        if not self.demands or not self.cfg.fill_vram:
+            return
+        node = self.fleet.nodes[nid]
+        cap = {nid: (node.hbm_free, node.klass.legacy)}
+        fill = [dataclasses.replace(d, min_replicas=0)
+                for d in self.demands.values()]
+        plan = place(cap, fill, fill=True)
+        self._execute(plan)
+
+    # ---------------------------------------------------------------- #
+    def dashboard(self) -> Dict:
+        """The SDAI Interface overview (paper Fig. 3)."""
+        agents = {}
+        for nid in self.nodes.ids():
+            node = self.fleet.nodes.get(nid)
+            alive = node is not None and node.alive \
+                and nid not in self._dead_nodes
+            agents[nid] = {
+                "class": node.klass.name if node else "?",
+                "alive": alive,
+                "health": self.monitor.status(nid).value,
+                "hbm_used": node.hbm_used if node and alive else 0,
+                "hbm_budget": node.hbm_budget if node else 0,
+                "instances": [
+                    {"model": r.model_name, "quantize": r.quantize}
+                    for r in self.replicas.on_node(nid)] if alive else [],
+            }
+        return {
+            "connected": sum(1 for a in agents.values() if a["alive"]),
+            "total": len(agents),
+            "agents": agents,
+            "models": {m: len(self.replicas.for_model(m))
+                       for m in self.replicas.models()},
+            "routing": self.frontend.routing_table(),
+            "last_update": self.clock(),
+        }
+
+    def fleet_utilization(self) -> float:
+        used = tot = 0
+        for nid in self.nodes.ids():
+            node = self.fleet.nodes.get(nid)
+            if node is None or not node.alive:
+                continue
+            used += node.hbm_used
+            tot += node.hbm_budget
+        return used / tot if tot else 0.0

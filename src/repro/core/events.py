@@ -1,0 +1,36 @@
+"""Controller event bus: every orchestration action is an auditable event
+(what the SDAI dashboard renders)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List
+
+
+@dataclasses.dataclass
+class Event:
+    kind: str
+    data: Dict[str, Any]
+    ts: float = dataclasses.field(default_factory=time.monotonic)
+
+
+class EventBus:
+    def __init__(self, keep: int = 10_000):
+        self.events: List[Event] = []
+        self.keep = keep
+        self.subscribers: List[Callable[[Event], None]] = []
+
+    def emit(self, kind: str, **data):
+        ev = Event(kind, data)
+        self.events.append(ev)
+        if len(self.events) > self.keep:
+            self.events = self.events[-self.keep:]
+        for sub in self.subscribers:
+            sub(ev)
+        return ev
+
+    def subscribe(self, fn: Callable[[Event], None]):
+        self.subscribers.append(fn)
+
+    def of_kind(self, kind: str) -> List[Event]:
+        return [e for e in self.events if e.kind == kind]

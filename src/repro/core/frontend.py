@@ -1,0 +1,131 @@
+"""Service Frontend — the HAProxy analogue.
+
+Health-checked, weighted-least-connection routing over model replicas, with
+retries and transparent failover.  Every backend node also gets a
+`NodeProxy` view (the paper runs HAProxy *on each node* so multiple replicas
+of one model can live on one node or across nodes); the frontend composes
+them into one logical endpoint per model — the unified client interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+from repro.cluster.fleet import Fleet
+from repro.core.health import HealthMonitor, NodeHealth
+from repro.core.registry import ReplicaKey, ReplicaRegistry
+from repro.serving.request import Request, RequestState
+
+
+@dataclasses.dataclass
+class FrontendConfig:
+    max_retries: int = 3
+    straggler_penalty: float = 10.0     # virtual connections added to
+    suspect_penalty: float = 10.0       # stragglers / suspect nodes
+
+
+@dataclasses.dataclass
+class FrontendStats:
+    routed: int = 0
+    failed: int = 0
+    retried: int = 0
+    rejected_no_backend: int = 0
+    per_replica: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+class ServiceFrontend:
+    def __init__(self, fleet: Fleet, replicas: ReplicaRegistry,
+                 monitor: HealthMonitor,
+                 cfg: FrontendConfig = FrontendConfig()):
+        self.fleet = fleet
+        self.replicas = replicas
+        self.monitor = monitor
+        self.cfg = cfg
+        self.stats = FrontendStats()
+        self._last_pick: Dict[str, int] = {}
+        self._pick_seq = 0
+
+    # ------------------------------------------------------------- #
+    def _replica_load(self, key: ReplicaKey) -> Optional[float]:
+        node = self.fleet.nodes.get(key.node_id)
+        if node is None or not node.alive:
+            return None
+        if self.monitor.status(key.node_id) == NodeHealth.DEAD:
+            return None
+        inst = node.instances.get(key.instance_id)
+        if inst is None or not inst.alive:
+            return None
+        load = float(inst.load)
+        # capability weighting: stronger nodes look "less loaded"
+        load /= max(node.klass.flops_total / 1e14, 1e-3)
+        if self.monitor.is_straggler(str(key)):
+            load += self.cfg.straggler_penalty
+        if self.monitor.status(key.node_id) == NodeHealth.SUSPECT:
+            load += self.cfg.suspect_penalty
+        return load
+
+    def healthy_replicas(self, model: str) -> List[ReplicaKey]:
+        out = []
+        for info in self.replicas.for_model(model):
+            if self._replica_load(info.key) is not None:
+                out.append(info.key)
+        return out
+
+    def pick(self, model: str,
+             exclude: Optional[set] = None) -> Optional[ReplicaKey]:
+        """Weighted least-connections with round-robin tie-breaking (so
+        instantly-completing requests still spread across replicas)."""
+        best, best_key = None, None
+        for info in self.replicas.for_model(model):
+            if exclude and info.key in exclude:
+                continue
+            load = self._replica_load(info.key)
+            if load is None:
+                continue
+            last = self._last_pick.get(str(info.key), -1)
+            sort_key = (load, last)
+            if best_key is None or sort_key < best_key:
+                best, best_key = info.key, sort_key
+        if best is not None:
+            self._pick_seq += 1
+            self._last_pick[str(best)] = self._pick_seq
+        return best
+
+    # ------------------------------------------------------------- #
+    def submit(self, req: Request) -> bool:
+        """Route with health-checked failover: on backend failure the
+        request transparently retries on the next-best replica."""
+        tried: set = set()
+        for attempt in range(self.cfg.max_retries + 1):
+            key = self.pick(req.model, exclude=tried)
+            if key is None:
+                self.stats.rejected_no_backend += 1
+                req.finish(error="no healthy backend")
+                return False
+            tried.add(key)
+            node = self.fleet.nodes[key.node_id]
+            t0 = time.monotonic()
+            ok = node.submit(key.instance_id, req)
+            if ok:
+                self.stats.routed += 1
+                rk = str(key)
+                self.stats.per_replica[rk] = \
+                    self.stats.per_replica.get(rk, 0) + 1
+                self.monitor.observe_latency(rk, time.monotonic() - t0)
+                return True
+            # backend refused / died mid-submit: reset & fail over
+            self.stats.retried += 1
+            req.retries += 1
+            req.state = RequestState.QUEUED
+            req.error = ""
+            req.finished_at = None
+        self.stats.failed += 1
+        req.finish(error="all replicas failed")
+        return False
+
+    # ------------------------------------------------------------- #
+    def routing_table(self) -> Dict[str, List[str]]:
+        """model -> healthy replica keys (the generated HAProxy config)."""
+        return {m: [str(k) for k in self.healthy_replicas(m)]
+                for m in self.replicas.models()}

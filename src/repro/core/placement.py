@@ -1,0 +1,195 @@
+"""VRAM-aware model placement — the SDAI controller's core algorithm.
+
+The paper's objective (§1, §3): *fully exploit the VRAM capacity of each
+node*, across a heterogeneous fleet, while spreading replicas for high
+availability.  We implement it as best-fit-decreasing bin packing with:
+
+  * replica anti-affinity (replicas of a model prefer distinct nodes —
+    the paper's resilience-by-rerouting story needs them apart),
+  * per-node precision selection (bf16 where it fits; int8/int4 fallback on
+    small/legacy nodes — the Ollama-GGUF-quant analogue),
+  * a fill phase that packs *extra* replicas into leftover VRAM until no
+    instance fits (maximizing utilization and throughput),
+  * reallocation planning for node failures / joins (dynamic reallocation,
+    §3 "dynamically reallocating workloads as necessary").
+
+`place_naive` is the paper-comparison baseline: first-fit, no sorting, no
+quantization fallback, no anti-affinity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ArchConfig
+from repro.cluster.node import instance_bytes
+
+PRECISIONS = ["", "int8", "int4"]          # descending fidelity
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDemand:
+    cfg: ArchConfig
+    min_replicas: int = 1
+    max_replicas: int = 0                   # 0 => min_replicas + 2
+    n_slots: int = 4
+    max_len: int = 2048
+    allow_quant: bool = True
+    weight: float = 1.0                     # expected traffic share
+
+    @property
+    def replica_cap(self) -> int:
+        return self.max_replicas or (self.min_replicas + 2)
+
+    def bytes_at(self, quantize: str) -> int:
+        return instance_bytes(self.cfg, quantize, self.n_slots,
+                              self.max_len)
+
+
+@dataclasses.dataclass(frozen=True)
+class Assignment:
+    node_id: str
+    model_name: str
+    quantize: str
+    n_slots: int
+    max_len: int
+    bytes: int
+
+
+@dataclasses.dataclass
+class PlacementPlan:
+    assignments: List[Assignment] = dataclasses.field(default_factory=list)
+    unplaced: List[str] = dataclasses.field(default_factory=list)
+
+    def by_node(self) -> Dict[str, List[Assignment]]:
+        out: Dict[str, List[Assignment]] = {}
+        for a in self.assignments:
+            out.setdefault(a.node_id, []).append(a)
+        return out
+
+    def replicas(self, model_name: str) -> List[Assignment]:
+        return [a for a in self.assignments if a.model_name == model_name]
+
+
+@dataclasses.dataclass
+class _Bin:
+    node_id: str
+    free: int
+    legacy: bool
+    hosted: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+def _mk_bins(nodes: Dict[str, Tuple[int, bool]]) -> List[_Bin]:
+    return [_Bin(nid, free, legacy) for nid, (free, legacy)
+            in nodes.items()]
+
+
+def _best_node(bins: List[_Bin], demand: ModelDemand) -> \
+        Optional[Tuple[_Bin, str]]:
+    """Pick (node, precision): prefer anti-affinity, then highest
+    precision, then tightest fit (best-fit => maximal utilization)."""
+    precisions = PRECISIONS if demand.allow_quant else [""]
+    best = None
+    best_key = None
+    for b in bins:
+        for p_idx, prec in enumerate(precisions):
+            need = demand.bytes_at(prec)
+            if need > b.free:
+                continue
+            affinity = b.hosted.get(demand.cfg.name, 0)
+            leftover = b.free - need
+            key = (affinity, p_idx, leftover)
+            if best_key is None or key < best_key:
+                best, best_key = (b, prec), key
+            break          # higher precision fits on this node; stop
+    return best
+
+
+def place(nodes: Dict[str, Tuple[int, bool]],
+          demands: Sequence[ModelDemand],
+          fill: bool = True) -> PlacementPlan:
+    """nodes: node_id -> (free_bytes, is_legacy)."""
+    bins = _mk_bins(nodes)
+    plan = PlacementPlan()
+
+    def commit(b: _Bin, d: ModelDemand, prec: str):
+        need = d.bytes_at(prec)
+        b.free -= need
+        b.hosted[d.cfg.name] = b.hosted.get(d.cfg.name, 0) + 1
+        plan.assignments.append(Assignment(
+            b.node_id, d.cfg.name, prec, d.n_slots, d.max_len, need))
+
+    # phase 1: min replicas, biggest models first (FFD)
+    order = sorted(demands, key=lambda d: -d.bytes_at(""))
+    for d in order:
+        for _ in range(d.min_replicas):
+            pick = _best_node(bins, d)
+            if pick is None:
+                plan.unplaced.append(d.cfg.name)
+                continue
+            commit(*[pick[0], d, pick[1]])
+
+    # phase 2: fill leftover VRAM with extra replicas (bounded by each
+    # demand's replica_cap), most under-provisioned-per-traffic first
+    if fill and demands:
+        counts = {d.cfg.name: len(plan.replicas(d.cfg.name))
+                  for d in demands}
+        exhausted: set = set()
+        progress = True
+        while progress:
+            live = [d for d in demands
+                    if d.cfg.name not in plan.unplaced
+                    and d.cfg.name not in exhausted
+                    and counts[d.cfg.name] < d.replica_cap]
+            if not live:
+                break
+            progress = False
+            live.sort(key=lambda d: counts[d.cfg.name] / d.weight)
+            for d in live:
+                pick = _best_node(bins, d)
+                if pick is not None:
+                    commit(pick[0], d, pick[1])
+                    counts[d.cfg.name] += 1
+                    progress = True
+                    break
+                exhausted.add(d.cfg.name)   # nothing fits anywhere
+    return plan
+
+
+def place_naive(nodes: Dict[str, Tuple[int, bool]],
+                demands: Sequence[ModelDemand]) -> PlacementPlan:
+    """Baseline: first-fit in arrival order, bf16 only, no fill phase."""
+    bins = _mk_bins(nodes)
+    plan = PlacementPlan()
+    for d in demands:
+        for _ in range(d.min_replicas):
+            placed = False
+            for b in bins:
+                need = d.bytes_at("")
+                if need <= b.free:
+                    b.free -= need
+                    plan.assignments.append(Assignment(
+                        b.node_id, d.cfg.name, "", d.n_slots, d.max_len,
+                        need))
+                    placed = True
+                    break
+            if not placed:
+                plan.unplaced.append(d.cfg.name)
+    return plan
+
+
+def reallocation_plan(nodes: Dict[str, Tuple[int, bool]],
+                      lost: Sequence[ModelDemand]) -> PlacementPlan:
+    """Re-place instances lost to a failure on the surviving fleet
+    (min_replicas of each lost demand; no fill — keep headroom for the
+    next failure)."""
+    return place(nodes, lost, fill=False)
+
+
+def plan_utilization(plan: PlacementPlan,
+                     nodes: Dict[str, Tuple[int, bool]]) -> float:
+    """Fraction of fleet VRAM used by the plan (the paper's efficiency
+    objective)."""
+    used = sum(a.bytes for a in plan.assignments)
+    total = sum(free for free, _ in nodes.values())
+    return used / total if total else 0.0

@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (Strategy, make_sharder,
+                                        tree_shardings, pick_strategy,
+                                        train_strategy, train_strategy_fsdp,
+                                        serve_strategy, STRATEGIES)
+
+__all__ = ["Strategy", "make_sharder", "tree_shardings", "pick_strategy",
+           "train_strategy", "train_strategy_fsdp", "serve_strategy",
+           "STRATEGIES"]

@@ -1,0 +1,104 @@
+"""Jit'd public wrappers for the Pallas kernels, including the distributed
+flash-decode combine (sequence-sharded KV + LSE merge via shard_map) — the
+TPU-native answer to serving long contexts across chips.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.int8_matmul import int8_matmul as _int8_mm
+
+# interpret=True everywhere on CPU (the TPU target compiles the same calls
+# with interpret=False)
+_INTERPRET = jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "prefix",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=0, prefix=0,
+                    block_q=128, block_k=128):
+    return _flash(q, k, v, causal=causal, window=window, prefix=prefix,
+                  block_q=block_q, block_k=block_k, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "prefix", "block_k"))
+def decode_attention(q, k_cache, v_cache, pos, *, window=0, prefix=0,
+                     block_k=256):
+    return _decode(q, k_cache, v_cache, pos, window=window, prefix=prefix,
+                   block_k=block_k, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "block_k"))
+def int8_matmul(x, w_q, scale, *, block_m=128, block_n=128, block_k=128):
+    return _int8_mm(x, w_q, scale, block_m=block_m, block_n=block_n,
+                    block_k=block_k, interpret=_INTERPRET)
+
+
+# --------------------------------------------------------------------- #
+# Distributed flash-decode: KV sequence-sharded over `axis`, partial
+# (num, denom, max) merged with tiny all-reduces — the collective-optimal
+# decode for GQA models whose kv_heads don't divide the TP axis.
+
+def _lse_partials(q, k_shard, v_shard, pos, kv_offset, *, window, prefix):
+    """Single-shard partial attention with explicit (m, l, num) outputs,
+    computed in pure jnp (the Pallas kernel's per-shard analogue)."""
+    b, nkv, g, hd = q.shape
+    s = k_shard.shape[2]
+    qf = q.astype(jnp.float32) * (hd ** -0.5)
+    kf = k_shard.astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qf, kf)
+    slot = kv_offset + jnp.arange(s)
+    valid = slot[None, :] <= pos[:, None]
+    if window > 0:
+        vis = slot[None, :] > (pos[:, None] - window)
+        if prefix > 0:
+            vis |= (slot < prefix)[None, :]
+        valid &= vis
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    m = jnp.max(scores, axis=-1)                             # (B,K,G)
+    p = jnp.exp(scores - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    num = jnp.einsum("bkgs,bksd->bkgd", p,
+                     v_shard.astype(jnp.float32))
+    return m, l, num
+
+
+def decode_attention_sharded(mesh: Mesh, axis: str):
+    """Returns fn(q, k_cache, v_cache, pos) with k/v sequence-sharded over
+    `axis`; each shard computes flash-decode partials locally, then a pair
+    of small all-reduces (max + weighted sums) merges them — wire cost
+    O(B*H*hd) instead of O(B*H*S)."""
+    from jax.experimental.shard_map import shard_map
+
+    def fn(q, k_cache, v_cache, pos):
+        b, nkv, g, hd = q.shape
+        s = k_cache.shape[2]
+        n_shards = mesh.shape[axis]
+        shard_len = s // n_shards
+
+        def shard_fn(q_, k_, v_, pos_):
+            idx = jax.lax.axis_index(axis)
+            m, l, num = _lse_partials(q_, k_, v_, pos_,
+                                      idx * shard_len, window=0, prefix=0)
+            m_g = jax.lax.pmax(m, axis)
+            corr = jnp.exp(m - m_g)
+            l_g = jax.lax.psum(l * corr, axis)
+            num_g = jax.lax.psum(num * corr[..., None], axis)
+            return (num_g / jnp.maximum(l_g[..., None], 1e-30)) \
+                .astype(q_.dtype)
+
+        return shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(P(), P(None, None, axis, None),
+                      P(None, None, axis, None), P()),
+            out_specs=P(),
+        )(q, k_cache, v_cache, pos)
+
+    return fn

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, prefix=0):
+    """q: (B, H, Sq, hd); k, v: (B, K, Skv, hd) -> (B, H, Sq, hd)."""
+    qt = q.transpose(0, 2, 1, 3)          # (B, Sq, H, hd)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = attn_lib.full_attention(qt, kt, vt, causal=causal, window=window,
+                                  prefix=prefix)
+    return out.transpose(0, 2, 1, 3)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos, *, window=0, prefix=0):
+    """q: (B, K, G, hd); caches: (B, K, S, hd); pos: (B,)."""
+    b, nkv, g, hd = q.shape
+    qt = q.reshape(b, 1, nkv * g, hd) if False else \
+        q.transpose(0, 2, 1, 3).reshape(b, 1, nkv * g, hd)
+    # models/attention expects (B, 1, H, hd) with H grouped kv-major:
+    # fold (K, G) -> H in kv-major order to match _gqa_fold
+    qt = q.reshape(b, nkv * g, hd)[:, None]
+    kt = k_cache.transpose(0, 2, 1, 3)    # (B, S, K, hd)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    out = attn_lib.decode_attention(qt, kt, vt, pos, window=window,
+                                    prefix=prefix)
+    return out[:, 0].reshape(b, nkv, g, hd)
+
+
+def int8_matmul_ref(x, w_q, scale):
+    """x: (M, K); w_q: (K, N) int8; scale: (1, N)."""
+    w = w_q.astype(jnp.float32) * scale.astype(jnp.float32)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)

@@ -1,0 +1,140 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against the production mesh, prove memory fits, and extract the
+roofline terms.  The two lines above MUST run before any jax import — jax
+locks the device count on first init.
+
+Usage:
+    python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             strategy_override: str = "", out_dir: str = "results/dryrun",
+             save_hlo: bool = False, variant: str = "") -> dict:
+    import jax
+    from repro.configs import get_config, SHAPES, runnable
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import lower_cell
+    from repro.roofline.analysis import analyze, model_flops_for
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = runnable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "strategy": strategy_override or "auto", "variant": variant}
+    if not ok:
+        rec.update({"status": "skipped", "reason": reason})
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    try:
+        t0 = time.time()
+        lowered, info = lower_cell(cfg, shape, mesh,
+                                   strategy_override=strategy_override,
+                                   variant=variant)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        mem_d = {}
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes", "peak_memory_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_d[k] = int(v)
+        hlo = compiled.as_text()
+        roof = analyze(compiled, chips,
+                       model_flops_global=model_flops_for(cfg, shape),
+                       hlo_text=hlo)
+        rec.update({
+            "status": "ok", "strategy": info["strategy"], "chips": chips,
+            "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+            "memory": mem_d,
+            "roofline": roof.to_dict(),
+            "dominant": roof.dominant,
+            "roofline_fraction": roof.roofline_fraction(),
+        })
+        if save_hlo:
+            hp = Path(out_dir) / f"{arch}__{shape_name}__{mesh_kind}.hlo"
+            hp.parent.mkdir(parents=True, exist_ok=True)
+            hp.write_text(hlo)
+    except Exception as e:
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-3000:]})
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--strategy", default="")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS, SHAPES
+    archs = list(ARCHS) if (args.all or not args.arch) \
+        else args.arch.split(",")
+    shapes = list(SHAPES) if (args.all or not args.shape) \
+        else args.shape.split(",")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                tag = f"{arch}__{shape}__{mesh_kind}"
+                if args.strategy:
+                    tag += f"__{args.strategy}"
+                if args.variant:
+                    tag += f"__{args.variant}"
+                fp = out_dir / f"{tag}.json"
+                if args.skip_existing and fp.exists():
+                    prev = json.loads(fp.read_text())
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[skip-existing] {tag}", flush=True)
+                        continue
+                t0 = time.time()
+                rec = run_cell(arch, shape, mesh_kind,
+                               strategy_override=args.strategy,
+                               out_dir=args.out, save_hlo=args.save_hlo,
+                               variant=args.variant)
+                fp.write_text(json.dumps(rec, indent=1))
+                dt = time.time() - t0
+                if rec["status"] == "ok":
+                    r = rec["roofline"]
+                    print(f"[ok]   {tag} ({dt:.0f}s) dominant="
+                          f"{rec['dominant']} "
+                          f"c/m/coll={r['compute_s']:.3f}/"
+                          f"{r['memory_s']:.3f}/{r['collective_s']:.3f}s "
+                          f"frac={rec['roofline_fraction']:.2f}",
+                          flush=True)
+                elif rec["status"] == "skipped":
+                    print(f"[skip] {tag}: {rec['reason'][:60]}", flush=True)
+                else:
+                    n_fail += 1
+                    print(f"[FAIL] {tag}: {rec['error']}", flush=True)
+    print(f"done; {n_fail} failures", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Mesh construction.  Functions only — importing this module never touches
+jax device state (spec requirement)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips for the multi-pod run."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_node_mesh(n_chips: int):
+    """Per-backend-node mesh (TP within one heterogeneous serving node)."""
+    return jax.make_mesh((n_chips,), ("model",))
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke tests / tiny serving replicas."""
+    return jax.make_mesh((1,), ("model",))

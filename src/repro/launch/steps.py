@@ -1,0 +1,250 @@
+"""Step builders: jit-able train / prefill / decode steps with full sharding
+specifications, plus `input_specs()` — ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation).
+
+These are the functions the dry-run lowers and the launchers execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.distributed.sharding import (Strategy, make_sharder,
+                                        make_weight_sharder,
+                                        make_tp_projector, make_tp_gather,
+                                        make_tp_col_projector,
+                                        train_compute_strategy,
+                                        tree_shardings, pick_strategy)
+from repro.models import build, Model
+from repro.training import optimizer as opt_lib
+
+PyTree = Any
+
+BATCH_AXES = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "prefix_embeds": ("batch", "seq", "embed"),
+    "src_embeds": ("batch", "seq", "embed"),
+}
+
+
+# --------------------------------------------------------------------- #
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec,
+                with_labels: bool = True) -> Dict[str, Any]:
+    b, s = shape.batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    dt = jnp.bfloat16 if cfg.dtype == "bf16" else jnp.float32
+    out: Dict[str, Any] = {}
+    n_text = s - (cfg.n_prefix_tokens if cfg.frontend == "vision" else 0)
+    out["tokens"] = sds((b, n_text), jnp.int32)
+    if with_labels:
+        out["labels"] = sds((b, n_text), jnp.int32)
+    if cfg.frontend == "vision":
+        out["prefix_embeds"] = sds((b, cfg.n_prefix_tokens, cfg.d_model), dt)
+    if cfg.is_encdec:
+        src = int(s * cfg.encdec.src_len_ratio)
+        out["src_embeds"] = sds((b, src, cfg.d_model), dt)
+    return out
+
+
+def cache_len_for(cfg: ArchConfig, shape: ShapeSpec) -> int:
+    """Decode cache length: seq_len + always-resident prefix tokens."""
+    return shape.seq_len + cfg.n_meta_tokens + \
+        (cfg.n_prefix_tokens if cfg.frontend == "vision" else 0)
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeSpec,
+                 kv_quant: bool = False) -> Dict[str, Any]:
+    model = build(cfg)
+    b = shape.batch
+    max_len = cache_len_for(cfg, shape)
+    src = int(shape.seq_len * cfg.encdec.src_len_ratio) if cfg.is_encdec \
+        else 0
+    cache = jax.eval_shape(
+        lambda: model.init_cache(b, max_len, src_len=src,
+                                 kv_quant=kv_quant))
+    return {"cache": cache,
+            "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((b,), jnp.int32)}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """All step inputs for this (arch x shape) cell, as ShapeDtypeStructs."""
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, shape, with_labels=False)}
+    return decode_specs(cfg, shape)
+
+
+# --------------------------------------------------------------------- #
+# Sharding trees
+
+def param_shardings(model: Model, mesh: Mesh, strategy: Strategy):
+    return tree_shardings(model.param_axes(), model.param_specs(), mesh,
+                          strategy)
+
+
+def batch_shardings(cfg: ArchConfig, specs: Dict, mesh: Mesh,
+                    strategy: Strategy):
+    return {k: strategy.sharding_for(BATCH_AXES[k], v.shape, mesh)
+            for k, v in specs.items()}
+
+
+def cache_shardings(model: Model, cache_specs, mesh: Mesh,
+                    strategy: Strategy, kv_quant: bool = False):
+    return tree_shardings(model.cache_axes(kv_quant=kv_quant),
+                          cache_specs, mesh, strategy)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# --------------------------------------------------------------------- #
+# Step builders
+
+def make_train_step(cfg: ArchConfig, mesh: Optional[Mesh] = None,
+                    strategy: Optional[Strategy] = None,
+                    opt_cfg: Optional[opt_lib.AdamWConfig] = None):
+    """Returns (train_step, init_state_fn).  State = params + adamw + step."""
+    model = build(cfg)
+    opt_cfg = opt_cfg or opt_lib.AdamWConfig()
+    sh = make_sharder(mesh, strategy)
+    # explicit per-layer FSDP weight gather (see sharding.py): fsdp_tp
+    # gathers only the embed dim; pure-fsdp gathers whole layer weights
+    shw = None
+    if mesh is not None and strategy is not None:
+        comp = train_compute_strategy(mesh) if strategy.name == "fsdp_tp" \
+            else Strategy(rules={}, priority=[], name="gather_all")
+        shw = make_weight_sharder(mesh, comp)
+        # explicit Megatron-SP collectives: row-parallel reduce-scatter
+        # out-projections, fused column-parallel gather+einsum, and the
+        # standalone seq gather (all with exact psum_scatter transposes)
+        sh.tp_project = make_tp_projector(mesh, strategy, comp)
+        sh.tp_col_project = make_tp_col_projector(mesh, strategy, comp)
+        sh.tp_gather = make_tp_gather(mesh, strategy)
+
+    def init_state(key):
+        params = model.init(key)
+        return {"params": params, "opt": opt_lib.adamw_init(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def train_step(state, batch):
+        def lossf(p):
+            return model.loss(p, batch, sh=sh, shw=shw, remat=True)
+        (loss, mets), grads = jax.value_and_grad(
+            lossf, has_aux=True)(state["params"])
+        new_p, new_opt, om = opt_lib.adamw_update(
+            state["params"], grads, state["opt"], state["step"], opt_cfg)
+        metrics = {"loss": mets["loss"], "aux": mets["aux"],
+                   "grad_norm": om["grad_norm"], "lr": om["lr"]}
+        return ({"params": new_p, "opt": new_opt,
+                 "step": state["step"] + 1}, metrics)
+
+    return train_step, init_state
+
+
+def state_shardings(cfg: ArchConfig, mesh: Mesh, strategy: Strategy):
+    model = build(cfg)
+    ps = param_shardings(model, mesh, strategy)
+    return {"params": ps, "opt": {"m": ps, "v": ps},
+            "step": replicated(mesh)}
+
+
+def state_specs(cfg: ArchConfig):
+    model = build(cfg)
+    p = model.param_specs()
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return {"params": p,
+            "opt": {"m": jax.tree.map(f32, p), "v": jax.tree.map(f32, p)},
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def make_prefill_step(cfg: ArchConfig, shape: ShapeSpec,
+                      mesh: Optional[Mesh] = None,
+                      strategy: Optional[Strategy] = None):
+    model = build(cfg)
+    sh = make_sharder(mesh, strategy)
+    max_len = cache_len_for(cfg, shape)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch["tokens"],
+                             prefix_embeds=batch.get("prefix_embeds"),
+                             src_embeds=batch.get("src_embeds"),
+                             cache_len=max_len, sh=sh)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, mesh: Optional[Mesh] = None,
+                     strategy: Optional[Strategy] = None):
+    model = build(cfg)
+    sh = make_sharder(mesh, strategy)
+
+    def decode_step(params, cache, token, pos):
+        return model.decode(params, cache, token, pos, sh=sh)
+    return decode_step
+
+
+# --------------------------------------------------------------------- #
+# Lowering helpers (used by dryrun + benchmarks)
+
+def lower_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+               strategy_override: str = "", donate_cache: bool = True,
+               variant: str = ""):
+    """Lower (not compile) the step for one (arch x shape x mesh) cell.
+
+    Returns (lowered, info dict).
+    """
+    model = build(cfg)
+    strategy = pick_strategy(
+        "train" if shape.kind == "train" else "serve", mesh,
+        cfg.num_params(), override=strategy_override)
+    kv_quant = (variant == "int8kv" and shape.kind == "decode"
+                and cfg.block != "xlstm")
+    specs = input_specs(cfg, shape)
+    if kv_quant:
+        specs = decode_specs(cfg, shape, kv_quant=True)
+    with mesh:
+        if shape.kind == "train":
+            step, _ = make_train_step(cfg, mesh, strategy)
+            st_sh = state_shardings(cfg, mesh, strategy)
+            b_sh = batch_shardings(cfg, specs["batch"], mesh, strategy)
+            lowered = jax.jit(
+                step,
+                in_shardings=(st_sh, b_sh),
+                out_shardings=(st_sh, replicated(mesh)),
+            ).lower(state_specs(cfg), specs["batch"])
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, shape, mesh, strategy)
+            p_sh = param_shardings(model, mesh, strategy)
+            b_sh = batch_shardings(cfg, specs["batch"], mesh, strategy)
+            lowered = jax.jit(
+                step, in_shardings=(p_sh, b_sh),
+            ).lower(model.param_specs(), specs["batch"])
+        else:
+            step = make_decode_step(cfg, mesh, strategy)
+            p_sh = param_shardings(model, mesh, strategy)
+            c_sh = cache_shardings(model, specs["cache"], mesh, strategy,
+                                   kv_quant=kv_quant)
+            tok_sh = strategy.sharding_for(("batch",),
+                                           specs["token"].shape, mesh)
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_sh, c_sh, tok_sh, tok_sh),
+                out_shardings=(
+                    strategy.sharding_for(
+                        ("batch", "vocab"),
+                        (shape.batch, cfg.vocab), mesh), c_sh),
+                donate_argnums=(1,) if donate_cache else (),
+            ).lower(model.param_specs(), specs["cache"], specs["token"],
+                    specs["pos"])
+    return lowered, {"strategy": strategy.name,
+                     "variant": variant}

@@ -1,0 +1,187 @@
+"""Attention cores: full (einsum), chunked-flash (jnp, scan over KV blocks),
+and single-token decode.  All GQA-aware; masks support causal, sliding-window
+and always-visible prefix (meta/patch tokens).
+
+The chunked path is the portable analogue of the Pallas flash kernel in
+``repro/kernels/flash_attention`` — same online-softmax math, `lax.scan` over
+KV blocks, so lowering stays small and activation memory stays O(chunk).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, kv_pos, *, causal: bool, window, prefix: int):
+    """Boolean (Q, S) visibility mask from absolute positions.
+
+    `window` may be a python int or a traced scalar (0 => no window).
+    Prefix tokens (kv_pos < prefix) are exempt from the *window* constraint
+    (hymba meta tokens stay visible beyond the sliding window) but still
+    respect causality.
+    """
+    if not causal:
+        return None
+    m = kv_pos[None, :] <= q_pos[:, None]
+    static_zero = isinstance(window, int) and window == 0
+    if not static_zero:
+        w = jnp.asarray(window)
+        inwin = (kv_pos[None, :] > q_pos[:, None] - w) | (w <= 0)
+        if prefix > 0:
+            inwin |= (kv_pos < prefix)[None, :]
+        m &= inwin
+    return m
+
+
+def _gqa_fold(q, n_kv: int):
+    """(B, Q, H, hd) -> (B, Q, K, G, hd)."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, hd)
+
+
+def full_attention(q, k, v, *, causal=True, window=0, prefix=0,
+                   q_offset=0, kv_offset=0):
+    """Reference einsum attention.  q: (B,Q,H,hd); k,v: (B,S,K,hd)."""
+    with jax.named_scope("full_attention"):
+        return _full_attention(q, k, v, causal=causal, window=window,
+                               prefix=prefix, q_offset=q_offset,
+                               kv_offset=kv_offset)
+
+
+def _full_attention(q, k, v, *, causal, window, prefix, q_offset,
+                    kv_offset):
+    b, qlen, h, hd = q.shape
+    s = k.shape[1]
+    nkv = k.shape[2]
+    qf = _gqa_fold(q, nkv).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf) / (hd ** 0.5)
+    q_pos = q_offset + jnp.arange(qlen)
+    kv_pos = kv_offset + jnp.arange(s)
+    m = _mask(q_pos, kv_pos, causal=causal, window=window, prefix=prefix)
+    if m is not None:
+        scores = jnp.where(m[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return out.reshape(b, qlen, h, hd).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, prefix=0,
+                      q_offset=0, kv_offset=0, chunk=1024):
+    """Flash-style online-softmax attention, scanning KV in blocks.
+
+    Memory: O(B * Q * chunk) instead of O(B * Q * S); HLO size O(1) in S.
+    """
+    with jax.named_scope("chunked_attention"):
+        return _chunked_attention(q, k, v, causal=causal, window=window,
+                                  prefix=prefix, q_offset=q_offset,
+                                  kv_offset=kv_offset, chunk=chunk)
+
+
+def _chunked_attention(q, k, v, *, causal, window, prefix, q_offset,
+                       kv_offset, chunk):
+    b, qlen, h, hd = q.shape
+    s = k.shape[1]
+    if s % chunk:
+        chunk = s  # fallback; callers pick divisible chunks
+    nkv = k.shape[2]
+    g = h // nkv
+    qf = _gqa_fold(q, nkv).astype(jnp.float32) / (hd ** 0.5)
+    n_chunks = s // chunk
+    kc = k.reshape(b, n_chunks, chunk, nkv, hd)
+    vc = v.reshape(b, n_chunks, chunk, nkv, hd)
+    q_pos = q_offset + jnp.arange(qlen)
+
+    def body(carry, xs):
+        m_run, l_run, acc = carry
+        k_blk, v_blk, blk_idx = xs
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qf,
+                            k_blk.astype(jnp.float32))
+        kv_pos = kv_offset + blk_idx * chunk + jnp.arange(chunk)
+        msk = _mask(q_pos, kv_pos, causal=causal, window=window,
+                    prefix=prefix)
+        if msk is not None:
+            scores = jnp.where(msk[None, None, None], scores, NEG_INF)
+        m_blk = jnp.max(scores, axis=-1)
+        m_new = jnp.maximum(m_run, m_blk)
+        corr = jnp.exp(m_run - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p, v_blk.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, nkv, g, qlen), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, nkv, g, qlen), jnp.float32)
+    a0 = jnp.zeros((b, nkv, g, qlen, hd), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l_f[..., None], 1e-30)
+    # (B, K, G, Q, hd) -> (B, Q, H, hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, qlen, h, hd)
+    return out.astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=0, prefix=0, q_offset=0,
+              kv_offset=0, chunk_threshold=2048, impl: str = "auto"):
+    """Dispatch: einsum for short sequences, chunked-flash for long.
+
+    Threshold 2048: above it the O(S^2) score tensor (and its *backward*,
+    which XLA reshards with score-sized all-gathers) dominates HBM and ICI
+    — chunked-flash keeps tiles O(S*chunk) and is what the Pallas kernel
+    implements on TPU (§Perf iteration 4)."""
+    s = k.shape[1]
+    if impl == "full" or (impl == "auto" and s <= chunk_threshold):
+        return full_attention(q, k, v, causal=causal, window=window,
+                              prefix=prefix, q_offset=q_offset,
+                              kv_offset=kv_offset)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             prefix=prefix, q_offset=q_offset,
+                             kv_offset=kv_offset)
+
+
+# --------------------------------------------------------------------- #
+# Decode (single new token against a cache)
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0, prefix=0,
+                     slot_pos=None):
+    """q: (B, 1, H, hd); caches: (B, S, K, hd); pos: (B,) int32 — index of
+    the *current* token (cache slots > pos are invalid).
+
+    slot_pos: (B, S) absolute position of each cache slot, for ring-buffer
+    (sliding-window) caches; defaults to iota (dense cache).
+    """
+    with jax.named_scope("decode_attention"):
+        return _decode_attention(q, k_cache, v_cache, pos, window=window,
+                                 prefix=prefix, slot_pos=slot_pos)
+
+
+def _decode_attention(q, k_cache, v_cache, pos, *, window, prefix,
+                      slot_pos):
+    b, _, h, hd = q.shape
+    s = k_cache.shape[1]
+    nkv = k_cache.shape[2]
+    qf = _gqa_fold(q, nkv).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qf,
+                        k_cache.astype(jnp.float32)) / (hd ** 0.5)
+    if slot_pos is None:
+        slot_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    valid = slot_pos <= pos[:, None]
+    static_zero = isinstance(window, int) and window == 0
+    if not static_zero:
+        w = jnp.asarray(window)
+        vis = (slot_pos > (pos[:, None] - w)) | (w <= 0)
+        if prefix > 0:
+            vis |= slot_pos < prefix
+        valid &= vis
+    scores = jnp.where(valid[:, None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", w, v_cache.astype(jnp.float32))
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, 1, h, hd)
+    return out.astype(q.dtype)

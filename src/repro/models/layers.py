@@ -1,0 +1,141 @@
+"""Core layers: norms, RoPE, MLPs, embeddings — pure JAX, layout-stable.
+
+Activation layout is always ``(batch, seq, d_model)``; attention heads are
+kept as explicit dims ``(batch, seq, heads, head_dim)`` so sharding rules can
+target them by logical axis name.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------- #
+# Norms
+
+def rms_norm(x, scale=None, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if scale is not None:
+        x = x * (1.0 + scale.astype(jnp.float32)) \
+            if scale.ndim == 1 else x * scale
+    return x.astype(dt)
+
+
+def nonparam_ln(x, eps: float = 1e-5):
+    """OLMo's non-parametric LayerNorm: no scale, no bias."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+def norm(x, scale, kind: str):
+    if kind == "nonparam_ln":
+        return nonparam_ln(x)
+    return rms_norm(x, scale)
+
+
+def group_norm(x, n_groups: int, eps: float = 1e-6):
+    """Per-head group norm (used by xLSTM / Hymba SSM branches).
+    x: (..., inner); normalizes each of n_groups groups independently."""
+    dt = x.dtype
+    *lead, inner = x.shape
+    g = x.astype(jnp.float32).reshape(*lead, n_groups, inner // n_groups)
+    mu = jnp.mean(g, axis=-1, keepdims=True)
+    var = jnp.var(g, axis=-1, keepdims=True)
+    g = (g - mu) * jax.lax.rsqrt(var + eps)
+    return g.reshape(*lead, inner).astype(dt)
+
+
+# --------------------------------------------------------------------- #
+# RoPE
+
+def rope_cos_sin(positions, head_dim: int, theta: float):
+    """positions: (...,) int -> cos/sin (..., head_dim//2) in f32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, hd); cos/sin: (S, hd//2) or (B, S, hd//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:           # (S, half) -> broadcast over B, H
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:                        # (B, S, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    xf = x.astype(jnp.float32)
+    x1f, x2f = xf[..., :half], xf[..., half:]
+    out = jnp.concatenate([x1f * cos - x2f * sin,
+                           x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# Row-parallel projection helper
+
+def row_project(sh, x, w, eq, x_axes, w_axes, out_axes, scatter_axis=1):
+    """Row-parallel (Megatron) out-projection: explicit psum_scatter when
+    the sharder carries a tp_project hook (distributed.make_tp_projector),
+    else plain einsum + output sharding constraint."""
+    proj = getattr(sh, "tp_project", None)
+    if proj is not None:
+        return proj(x, w, eq, x_axes, w_axes, out_axes, scatter_axis)
+    return sh(jnp.einsum(eq, x, w), out_axes)
+
+
+def col_project(sh, x, w, eq, x_axes, w_axes, out_axes, gather_axis=1):
+    """Column-parallel (Megatron f) projection: all_gather(x_seq)+einsum
+    fused in one shard_map so the backward is a single psum_scatter."""
+    proj = getattr(sh, "tp_col_project", None)
+    if proj is not None:
+        return proj(x, w, eq, x_axes, w_axes, out_axes, gather_axis)
+    return sh(jnp.einsum(eq, x, w), out_axes)
+
+
+def seq_gather(sh, x, axes, axis: int = 1):
+    """Megatron-SP f-operator: gather the seq-sharded residual once per
+    block (shard_map all_gather => reduce-scatter transpose).  Falls back
+    to a sharding constraint when no tp_gather hook is attached."""
+    g = getattr(sh, "tp_gather", None)
+    if g is not None:
+        return g(x, axes, axis)
+    fallback = tuple("seq_attn" if a == "seq" else a for a in axes)
+    return sh(x, fallback)
+
+
+# --------------------------------------------------------------------- #
+# MLP
+
+def mlp_apply(x, wi, wo, act: str, sh=None):
+    """Dense FFN.  wi: (2, D, F) for swiglu, (D, F) for gelu; wo: (F, D)."""
+    if act == "swiglu":
+        gate = jnp.einsum("bsd,df->bsf", x, wi[0])
+        up = jnp.einsum("bsd,df->bsf", x, wi[1])
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, wi)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    if sh is not None:
+        return row_project(sh, h, wo, "bsf,fd->bsd",
+                           ("batch", "seq_attn", "mlp"),
+                           ("mlp", "embed"), ("batch", "seq", "embed"))
+    return jnp.einsum("bsf,fd->bsd", h, wo)
+
+
+# --------------------------------------------------------------------- #
+# Init helpers
+
+def trunc_normal(key, shape, scale: float, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, shape, dtype):
+    return trunc_normal(key, shape, (1.0 / d_in) ** 0.5, dtype)

@@ -1,0 +1,98 @@
+"""Model facade: a uniform interface over all architecture families.
+
+`build(cfg)` returns a `Model` whose methods dispatch to the right family
+implementation (transformer / xlstm).  Everything downstream — training loop,
+serving engine, dry-run launcher, SDAI backend nodes — talks only to this
+interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.models import xlstm as xl
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ---------------- params ---------------- #
+    def init(self, key) -> PyTree:
+        if self.cfg.block == "xlstm":
+            return xl.init_params(self.cfg, key)
+        return tf.init_params(self.cfg, key)
+
+    def param_axes(self) -> PyTree:
+        if self.cfg.block == "xlstm":
+            return xl.param_axes(self.cfg)
+        return tf.param_axes(self.cfg)
+
+    def param_specs(self) -> PyTree:
+        """ShapeDtypeStructs for every param — no allocation (dry-run)."""
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    def num_params(self) -> int:
+        specs = self.param_specs()
+        return sum(int(jnp.prod(jnp.array(x.shape)))
+                   for x in jax.tree.leaves(specs))
+
+    # ---------------- training ---------------- #
+    def loss(self, params, batch, *, sh=tf._id_sh, shw=None, remat=False):
+        if self.cfg.block == "xlstm":
+            logits, _, _ = xl.forward(params, self.cfg, batch["tokens"],
+                                      sh=sh, shw=shw, remat=remat)
+            labels = batch["labels"]
+            mask = labels != -100
+            lab = jnp.where(mask, labels, 0)
+            lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            nll = -jnp.take_along_axis(lp, lab[..., None], axis=-1)[..., 0]
+            denom = jnp.maximum(jnp.sum(mask), 1)
+            loss = jnp.sum(jnp.where(mask, nll, 0.0)) / denom
+            return loss, {"loss": loss, "aux": 0.0,
+                          "tokens": denom.astype(jnp.float32)}
+        return tf.loss_fn(params, self.cfg, batch, sh=sh, shw=shw,
+                          remat=remat)
+
+    def forward(self, params, tokens, **kw):
+        if self.cfg.block == "xlstm":
+            return xl.forward(params, self.cfg, tokens, **kw)
+        return tf.forward(params, self.cfg, tokens, **kw)
+
+    # ---------------- serving ---------------- #
+    def init_cache(self, batch: int, max_len: int, src_len: int = 0,
+                   dtype=None, kv_quant: bool = False):
+        if self.cfg.block == "xlstm":
+            return xl.init_cache(self.cfg, batch)
+        return tf.init_cache(self.cfg, batch, max_len, src_len=src_len,
+                             dtype=dtype, kv_quant=kv_quant)
+
+    def cache_axes(self, kv_quant: bool = False):
+        if self.cfg.block == "xlstm":
+            return xl.cache_axes(self.cfg)
+        return tf.cache_axes(self.cfg, kv_quant=kv_quant)
+
+    def prefill(self, params, tokens, **kw):
+        if self.cfg.block == "xlstm":
+            kw.pop("prefix_embeds", None)
+            kw.pop("src_embeds", None)
+            kw.pop("cache_len", None)
+            kw.pop("kv_quant", None)
+            return xl.prefill(params, self.cfg, tokens, **kw)
+        return tf.prefill(params, self.cfg, tokens, **kw)
+
+    def decode(self, params, cache, token, pos, *, sh=tf._id_sh):
+        if self.cfg.block == "xlstm":
+            return xl.decode_step(params, self.cfg, cache, token, sh=sh)
+        return tf.decode_step(params, self.cfg, cache, token, pos, sh=sh)
+
+
+def build(cfg: ArchConfig) -> Model:
+    return Model(cfg)

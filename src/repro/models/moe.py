@@ -1,0 +1,137 @@
+"""Mixture-of-Experts FFN with sort-based (gather/scatter) dispatch.
+
+TPU-native adaptation: instead of the classic one-hot dispatch einsum —
+whose FLOPs (B*S*E*C*D) can exceed the expert FLOPs themselves for
+small-expert models like granite-moe — tokens are argsorted by expert id and
+scattered into (E, C, D) slot buffers.  Dispatch then costs *memory ops*, not
+matmul FLOPs, keeping MODEL_FLOPS/HLO_FLOPs honest.
+
+`moe_ffn_ref` keeps the obvious dense-masked implementation as the oracle
+for property tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+
+
+def router_topk(x, router_w, moe: MoEConfig):
+    """x: (B,S,D) -> gates (B,S,k) f32, idx (B,S,k) int32, aux-loss scalar."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, moe.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balancing auxiliary loss
+    e = moe.num_experts
+    density = jnp.mean(jax.nn.one_hot(idx[..., 0], e), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(density * mean_prob)
+    return gates, idx, aux
+
+
+def capacity(seq: int, moe: MoEConfig) -> int:
+    c = int(seq * moe.top_k / moe.num_experts * moe.capacity_factor)
+    return max(c, moe.top_k)
+
+
+def _dispatch_one_row(x, idx, gates, e: int, c: int):
+    """Per-batch-row sort-based dispatch.
+
+    x: (S, D); idx/gates: (S, k).  Returns (expert_in (E*C, D),
+    slot (S*k,), keep (S*k,), flat gates (S*k,)).
+    """
+    s, k = idx.shape
+    flat_e = idx.reshape(s * k)                       # s-major order
+    flat_g = gates.reshape(s * k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    # rank within expert group = position - start of group
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    rank = jnp.arange(s * k) - group_start[sorted_e]
+    keep_sorted = rank < c
+    slot_sorted = sorted_e * c + jnp.minimum(rank, c - 1)
+    # un-sort back to flat order
+    inv = jnp.argsort(order, stable=True)
+    slot = slot_sorted[inv]
+    keep = keep_sorted[inv]
+    tok = jnp.arange(s * k) // k
+    expert_in = jnp.zeros((e * c, x.shape[-1]), x.dtype)
+    contrib = jnp.where(keep[:, None], x[tok], 0)
+    expert_in = expert_in.at[jnp.where(keep, slot, e * c)].add(
+        contrib, mode="drop")
+    return expert_in, slot, keep, flat_g
+
+
+def moe_ffn(x, router_w, wi, wo, moe: MoEConfig, act: str,
+            sh=lambda x, axes: x):
+    """x: (B,S,D); wi: (E, 2, D, F) swiglu / (E, D, F) gelu; wo: (E, F, D).
+
+    Returns (y (B,S,D), aux_loss scalar).  sh: sharding-constraint hook —
+    REQUIRED under SPMD: XLA loses the batch sharding through the
+    argsort/scatter dispatch and would otherwise replicate expert_in,
+    running every chip over the *global* batch (a ~n_chips x compute
+    blowup, see EXPERIMENTS.md §Perf).
+    """
+    b, s, d = x.shape
+    e, cap = moe.num_experts, capacity(s, moe)
+    # dispatch indexes tokens across the whole sequence: with a
+    # seq-sharded (SP) residual each chip would scatter partial expert
+    # buffers and all-reduce them (7.5 GB/layer!) — gather the token dim
+    # once instead (0.8 GB/layer), §Perf iteration 7.
+    x = sh(x, ("batch", "seq_attn", "embed"))
+    gates, idx, aux = router_topk(x, router_w, moe)
+
+    expert_in, slot, keep, flat_g = jax.vmap(
+        lambda xr, ir, gr: _dispatch_one_row(xr, ir, gr, e, cap)
+    )(x, idx, gates)
+    ein = expert_in.reshape(b, e, cap, d)
+    ein = sh(ein, ("batch", "experts", "capacity", "embed"))
+
+    if act == "swiglu":
+        gate = jnp.einsum("becd,edf->becf", ein, wi[:, 0])
+        up = jnp.einsum("becd,edf->becf", ein, wi[:, 1])
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        h = jnp.einsum("becd,edf->becf", ein, wi)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    # down-projection contracts the TP-sharded F dim: explicit
+    # psum_scatter onto the D dim (XLA would emit a 2x-wire all-reduce);
+    # the slot->token gather below runs on D-shards and the residual add
+    # reshards via a cheap all-to-all (§Perf iterations 5+8).
+    from repro.models.layers import row_project
+    eout = row_project(sh, h, wo, "becf,efd->becd",
+                       ("batch", "experts", "capacity", "mlp"),
+                       ("experts", "mlp", "embed"),
+                       ("batch", "experts", "capacity", "embed_rs"),
+                       scatter_axis=3)
+
+    eflat = eout.reshape(b, e * cap, d)
+    gathered = jnp.take_along_axis(
+        eflat, slot[..., None], axis=1)               # (B, S*k, D)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    weighted = gathered * flat_g[..., None].astype(x.dtype)
+    y = jnp.sum(weighted.reshape(b, s, moe.top_k, d), axis=2)
+    return y, aux
+
+
+def moe_ffn_ref(x, router_w, wi, wo, moe: MoEConfig, act: str):
+    """Dense-masked oracle (no capacity drop when cf is large enough):
+    every token runs through its top-k experts via masking."""
+    gates, idx, aux = router_topk(x, router_w, moe)
+    y = jnp.zeros_like(x)
+    for e_id in range(moe.num_experts):
+        if act == "swiglu":
+            g = jnp.einsum("bsd,df->bsf", x, wi[e_id, 0])
+            u = jnp.einsum("bsd,df->bsf", x, wi[e_id, 1])
+            h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        else:
+            h = jnp.einsum("bsd,df->bsf", x, wi[e_id])
+            h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+        out = jnp.einsum("bsf,fd->bsd", h, wo[e_id])
+        w = jnp.sum(jnp.where(idx == e_id, gates, 0.0),
+                    axis=-1)[..., None].astype(x.dtype)
+        y += out * w
+    return y, aux

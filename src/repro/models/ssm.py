@@ -1,0 +1,242 @@
+"""State-space & recurrent cores.
+
+- ``selective_scan``  — mamba-style diagonal SSM (Hymba's SSM heads), chunked
+  so activation memory is O(chunk) and HLO size is O(1) in sequence length.
+- ``mlstm_*``         — xLSTM matrix-memory cell: parallel (quadratic),
+  chunkwise (linear memory, for long prefill) and recurrent (decode) forms,
+  all with the paper's max-stabilizer; equivalence is property-tested.
+- ``slstm_scan``      — xLSTM scalar-memory cell (strictly sequential).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------- #
+# Mamba-style diagonal selective SSM (Hymba)
+
+def selective_scan(u, dt, A, B_t, C_t, h0, chunk: int = 256):
+    """h_t = exp(dt_t*A) h_{t-1} + dt_t*B_t*u_t ;  y_t = (h_t . C_t) + skip.
+
+    u, dt: (B, S, I);  A: (I, N);  B_t, C_t: (B, S, N);  h0: (B, I, N).
+    Returns (y (B,S,I), h_final (B,I,N)).  Skip term is applied by caller.
+    """
+    with jax.named_scope("selective_scan"):
+        return _selective_scan(u, dt, A, B_t, C_t, h0, chunk)
+
+
+def _selective_scan(u, dt, A, B_t, C_t, h0, chunk):
+    b, s, i = u.shape
+    n = A.shape[-1]
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+
+    def chunk_body(h, xs):
+        uc, dtc, Bc, Cc = xs               # (B, c, ...)
+        dA = jnp.exp(dtc[..., None] * A)                    # (B,c,I,N)
+        dBu = (dtc * uc)[..., None] * Bc[:, :, None, :]     # (B,c,I,N)
+
+        def combine(x, y):
+            a1, b1 = x
+            a2, b2 = y
+            return a1 * a2, b1 * a2 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(
+            combine, (dA, dBu), axis=1)
+        h_all = b_cum + a_cum * h[:, None]                  # (B,c,I,N)
+        y = jnp.einsum("bcin,bcn->bci", h_all, Cc)
+        return h_all[:, -1], y
+
+    u_c = u.reshape(b, nc, chunk, i).swapaxes(0, 1)
+    dt_c = dt.reshape(b, nc, chunk, i).swapaxes(0, 1)
+    B_c = B_t.reshape(b, nc, chunk, n).swapaxes(0, 1)
+    C_c = C_t.reshape(b, nc, chunk, n).swapaxes(0, 1)
+    h_f, y = jax.lax.scan(chunk_body, h0, (u_c, dt_c, B_c, C_c))
+    y = y.swapaxes(0, 1).reshape(b, s, i)
+    return y, h_f
+
+
+def selective_step(u, dt, A, B_t, C_t, h):
+    """Single decode step.  u, dt: (B, I); B_t, C_t: (B, N); h: (B, I, N)."""
+    dA = jnp.exp(dt[..., None] * A)
+    dBu = (dt * u)[..., None] * B_t[:, None, :]
+    h_new = dA * h + dBu
+    y = jnp.einsum("bin,bn->bi", h_new, C_t)
+    return y, h_new
+
+
+# --------------------------------------------------------------------- #
+# mLSTM (xLSTM matrix memory)
+
+class MLSTMState(NamedTuple):
+    C: jax.Array      # (B, H, hd, hd)
+    n: jax.Array      # (B, H, hd)
+    m: jax.Array      # (B, H)
+
+
+def mlstm_init_state(b, h, hd, dtype=jnp.float32):
+    return MLSTMState(C=jnp.zeros((b, h, hd, hd), dtype),
+                      n=jnp.zeros((b, h, hd), dtype),
+                      m=jnp.full((b, h), -1e30, dtype))
+
+
+def mlstm_parallel(q, k, v, i_raw, f_raw):
+    """Stabilized parallel (quadratic) form.
+
+    q,k,v: (B, S, H, hd);  i_raw, f_raw: (B, S, H).  Returns (B, S, H, hd).
+    """
+    with jax.named_scope("mlstm_parallel"):
+        return _mlstm_parallel(q, k, v, i_raw, f_raw)
+
+
+def _mlstm_parallel(q, k, v, i_raw, f_raw):
+    b, s, h, hd = q.shape
+    qf = q.astype(jnp.float32).transpose(0, 2, 1, 3)          # (B,H,S,hd)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3) / (hd ** 0.5)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    log_f = jax.nn.log_sigmoid(f_raw.astype(jnp.float32)).transpose(0, 2, 1)
+    log_i = i_raw.astype(jnp.float32).transpose(0, 2, 1)      # (B,H,S)
+    cum = jnp.cumsum(log_f, axis=-1)                          # inclusive
+    # D_log[t, s] = cum[t] - cum[s] + log_i[s]  for s <= t
+    dlog = cum[..., :, None] - cum[..., None, :] + log_i[..., None, :]
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    dlog = jnp.where(causal, dlog, -jnp.inf)
+    m = jnp.max(dlog, axis=-1)                                # (B,H,S)
+    d = jnp.exp(dlog - m[..., None])
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * d
+    denom = jnp.maximum(jnp.abs(jnp.sum(scores, axis=-1)), jnp.exp(-m))
+    out = jnp.einsum("bhqk,bhkd->bhqd", scores, vf) / denom[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def mlstm_recurrent(q, k, v, i_raw, f_raw, state: MLSTMState):
+    """Single-step recurrent form.  q,k,v: (B, H, hd); gates: (B, H)."""
+    hd = q.shape[-1]
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32) / (hd ** 0.5)
+    vf = v.astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    log_i = i_raw.astype(jnp.float32)
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    f_s = jnp.exp(log_f + state.m - m_new)[..., None]
+    i_s = jnp.exp(log_i - m_new)[..., None]
+    C = f_s[..., None] * state.C + i_s[..., None] * \
+        jnp.einsum("bhd,bhk->bhdk", vf, kf)
+    n = f_s * state.n + i_s * kf
+    num = jnp.einsum("bhdk,bhk->bhd", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)),
+                      jnp.exp(-m_new))[..., None]
+    out = (num / den).astype(q.dtype)
+    return out, MLSTMState(C=C, n=n, m=m_new)
+
+
+def mlstm_chunkwise(q, k, v, i_raw, f_raw, state: MLSTMState,
+                    chunk: int = 256):
+    """Chunked linear-memory form: intra-chunk parallel + inter-chunk
+    recurrent state, with consistent max-stabilizers.  Matches
+    mlstm_parallel when state is the zero/init state (property-tested)."""
+    with jax.named_scope("mlstm_chunkwise"):
+        return _mlstm_chunkwise(q, k, v, i_raw, f_raw, state, chunk)
+
+
+def _mlstm_chunkwise(q, k, v, i_raw, f_raw, state, chunk):
+    b, s, h, hd = q.shape
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+    qf = q.astype(jnp.float32).reshape(b, nc, chunk, h, hd).transpose(
+        1, 0, 3, 2, 4)                                        # (nc,B,H,c,hd)
+    kf = (k.astype(jnp.float32) / (hd ** 0.5)).reshape(
+        b, nc, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    vf = v.astype(jnp.float32).reshape(b, nc, chunk, h, hd).transpose(
+        1, 0, 3, 2, 4)
+    log_f = jax.nn.log_sigmoid(f_raw.astype(jnp.float32)).reshape(
+        b, nc, chunk, h).transpose(1, 0, 3, 2)                # (nc,B,H,c)
+    log_i = i_raw.astype(jnp.float32).reshape(
+        b, nc, chunk, h).transpose(1, 0, 3, 2)
+
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(carry, xs):
+        C_p, n_p, m_p = carry
+        qc, kc, vc, lf, li = xs
+        lcum = jnp.cumsum(lf, axis=-1)                        # (B,H,c)
+        g = lcum[..., -1]                                     # total decay
+        # intra-chunk log decay matrix
+        dlog = lcum[..., :, None] - lcum[..., None, :] + li[..., None, :]
+        dlog = jnp.where(causal, dlog, -jnp.inf)
+        m_intra = jnp.max(dlog, axis=-1)                      # (B,H,c)
+        m_inter = m_p[..., None] + lcum                       # (B,H,c)
+        m_c = jnp.maximum(m_intra, m_inter)
+        d_intra = jnp.exp(dlog - m_c[..., None])
+        sc = jnp.einsum("bhqd,bhkd->bhqk", qc, kc) * d_intra
+        w_inter = jnp.exp(m_inter - m_c)[..., None]           # (B,H,c,1)
+        num = jnp.einsum("bhqk,bhkd->bhqd", sc, vc) \
+            + w_inter * jnp.einsum("bhdk,bhqk->bhqd", C_p, qc)
+        den_vec = jnp.sum(sc, axis=-1) \
+            + w_inter[..., 0] * jnp.einsum("bhk,bhqk->bhq", n_p, qc)
+        den = jnp.maximum(jnp.abs(den_vec), jnp.exp(-m_c))
+        out = num / den[..., None]
+        # state update to end of chunk
+        m_new = jnp.maximum(
+            m_p + g, jnp.max(g[..., None] - lcum + li, axis=-1))
+        decay_s = jnp.exp(g[..., None] - lcum + li - m_new[..., None])
+        C_new = jnp.exp(m_p + g - m_new)[..., None, None] * C_p + \
+            jnp.einsum("bhk,bhkd,bhke->bhde", decay_s, vc, kc)
+        n_new = jnp.exp(m_p + g - m_new)[..., None] * n_p + \
+            jnp.einsum("bhk,bhkd->bhd", decay_s, kc)
+        return (C_new, n_new, m_new), out
+
+    (C_f, n_f, m_f), outs = jax.lax.scan(
+        body, (state.C.astype(jnp.float32), state.n.astype(jnp.float32),
+               state.m.astype(jnp.float32)),
+        (qf, kf, vf, log_f, log_i))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, s, h, hd)
+    return out.astype(q.dtype), MLSTMState(C=C_f, n=n_f, m=m_f)
+
+
+# --------------------------------------------------------------------- #
+# sLSTM (xLSTM scalar memory) — strictly sequential
+
+class SLSTMState(NamedTuple):
+    c: jax.Array      # (B, H, hd)
+    n: jax.Array      # (B, H, hd)
+    m: jax.Array      # (B, H, hd)
+    h: jax.Array      # (B, H, hd)
+
+
+def slstm_init_state(b, h, hd, dtype=jnp.float32):
+    z = jnp.zeros((b, h, hd), dtype)
+    return SLSTMState(c=z, n=z, m=jnp.full((b, h, hd), -1e30, dtype), h=z)
+
+
+def slstm_step(xw, r, state: SLSTMState):
+    """One timestep.  xw: (B, 4, H, hd) precomputed input projections
+    (z, i, f, o); r: (4, H, hd, hd) recurrent block-diagonal weights."""
+    hf = state.h
+    rec = jnp.einsum("bhk,ghkl->bghl", hf, r)                 # (B,4,H,hd)
+    pre = xw.astype(jnp.float32) + rec
+    z = jnp.tanh(pre[:, 0])
+    log_i = pre[:, 1]
+    log_f = jax.nn.log_sigmoid(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + state.m - m_new)
+    c = f_s * state.c + i_s * z
+    n = f_s * state.n + i_s
+    h_new = o * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c=c, n=n, m=m_new, h=h_new)
+
+
+def slstm_scan(xw_seq, r, state: SLSTMState):
+    """xw_seq: (B, S, 4, H, hd).  Returns (h_seq (B,S,H,hd), final state)."""
+    def body(st, xw):
+        st2 = slstm_step(xw, r, st)
+        return st2, st2.h
+
+    final, hs = jax.lax.scan(body, state, xw_seq.swapaxes(0, 1))
+    return hs.swapaxes(0, 1), final

@@ -1,0 +1,274 @@
+"""xLSTM LM: alternating mLSTM / sLSTM block pairs (arXiv:2405.04517).
+
+Layers come in pairs (mLSTM block, then sLSTM block); pairs are stacked and
+scanned.  Training uses the parallel (<=4k) or chunkwise (longer) mLSTM form;
+decoding is O(1)-state recurrent.  sLSTM is strictly sequential (lax.scan over
+time) — its input projections are hoisted out of the time scan.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as ssm_lib
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bf16" else jnp.float32
+
+
+def dims(cfg: ArchConfig):
+    d = cfg.d_model
+    inner = 2 * d                      # mLSTM up-projection factor 2
+    h = cfg.n_heads
+    ff = int(8 * d / 3 / 64 + 1) * 64  # sLSTM post-FFN (~4/3 * 2d)
+    return d, inner, h, inner // h, d // h, ff
+
+
+def n_pairs(cfg: ArchConfig) -> int:
+    return max(1, cfg.n_layers // 2)
+
+
+def _pair_init(cfg: ArchConfig, key):
+    dt = _dt(cfg)
+    d, inner, h, hd_m, hd_s, ff = dims(cfg)
+    ks = iter(jax.random.split(key, 16))
+    return {
+        "mlstm": {
+            "ln": jnp.zeros((d,), dt),
+            "w_up": L.dense_init(next(ks), d, (d, 2, inner), dt),
+            "wq": L.dense_init(next(ks), inner, (inner, h, hd_m), dt),
+            "wk": L.dense_init(next(ks), inner, (inner, h, hd_m), dt),
+            "wv": L.dense_init(next(ks), inner, (inner, h, hd_m), dt),
+            "w_i": L.dense_init(next(ks), inner, (inner, h), jnp.float32),
+            "b_i": jnp.zeros((h,), jnp.float32),
+            "w_f": L.dense_init(next(ks), inner, (inner, h), jnp.float32),
+            "b_f": jnp.full((h,), 3.0, jnp.float32),  # open forget gates
+            "gn": jnp.zeros((inner,), dt),
+            "w_down": L.dense_init(next(ks), inner, (inner, d), dt),
+        },
+        "slstm": {
+            "ln": jnp.zeros((d,), dt),
+            "w_x": L.dense_init(next(ks), d, (d, 4, h, hd_s), jnp.float32),
+            "r": L.dense_init(next(ks), hd_s, (4, h, hd_s, hd_s),
+                              jnp.float32),
+            "b": jnp.zeros((4, h, hd_s), jnp.float32),
+            "gn": jnp.zeros((d,), dt),
+            "ffn_wi": L.dense_init(next(ks), d, (d, ff), dt),
+            "ffn_wo": L.dense_init(next(ks), ff, (ff, d), dt),
+        },
+    }
+
+
+def _pair_axes(cfg: ArchConfig):
+    return {
+        "mlstm": {"ln": ("embed",),
+                  "w_up": ("embed", "stack", "inner"),
+                  "wq": ("inner", "heads", "head_dim"),
+                  "wk": ("inner", "heads", "head_dim"),
+                  "wv": ("inner", "heads", "head_dim"),
+                  "w_i": ("inner", "heads"), "b_i": ("heads",),
+                  "w_f": ("inner", "heads"), "b_f": ("heads",),
+                  "gn": ("inner",), "w_down": ("inner", "embed")},
+        "slstm": {"ln": ("embed",),
+                  "w_x": ("embed", "stack", "heads", "head_dim"),
+                  "r": ("stack", "heads", "head_dim", "head_dim2"),
+                  "b": ("stack", "heads", "head_dim"),
+                  "gn": ("embed",),
+                  "ffn_wi": ("embed", "mlp"), "ffn_wo": ("mlp", "embed")},
+    }
+
+
+def init_params(cfg: ArchConfig, key):
+    dt = _dt(cfg)
+    k_e, k_p = jax.random.split(key)
+    pk = jax.random.split(k_p, n_pairs(cfg))
+    return {
+        "embed": L.trunc_normal(k_e, (cfg.vocab, cfg.d_model), 0.02, dt),
+        "pairs": jax.vmap(lambda k: _pair_init(cfg, k))(pk),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+
+
+def param_axes(cfg: ArchConfig):
+    stack = jax.tree.map(lambda ax: ("layers",) + ax, _pair_axes(cfg),
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return {"embed": ("vocab", "embed"), "pairs": stack,
+            "final_norm": ("embed",)}
+
+
+# --------------------------------------------------------------------- #
+
+def _mlstm_block_seq(mp, cfg, h, sh, state=None, chunked=False):
+    """Full-sequence mLSTM block.  Returns (h_out, final MLSTMState)."""
+    d, inner, nh, hd_m, _, _ = dims(cfg)
+    b, s, _ = h.shape
+    x = L.rms_norm(h, mp["ln"])
+    up = jnp.einsum("bsd,dgi->bsgi", x, mp["w_up"])
+    u, z = up[:, :, 0], up[:, :, 1]
+    u = sh(u, ("batch", "seq", "inner"))
+    q = jnp.einsum("bsi,ihk->bshk", u, mp["wq"])
+    k = jnp.einsum("bsi,ihk->bshk", u, mp["wk"])
+    v = jnp.einsum("bsi,ihk->bshk", u, mp["wv"])
+    i_raw = jnp.einsum("bsi,ih->bsh", u.astype(jnp.float32), mp["w_i"]) \
+        + mp["b_i"]
+    f_raw = jnp.einsum("bsi,ih->bsh", u.astype(jnp.float32), mp["w_f"]) \
+        + mp["b_f"]
+    if state is None:
+        state = ssm_lib.mlstm_init_state(b, nh, hd_m)
+    if chunked or s > 4096:
+        core, fin = ssm_lib.mlstm_chunkwise(q, k, v, i_raw, f_raw, state)
+    else:
+        core = ssm_lib.mlstm_parallel(q, k, v, i_raw, f_raw)
+        _, fin = ssm_lib.mlstm_chunkwise(q, k, v, i_raw, f_raw, state,
+                                         chunk=min(s, 256)) \
+            if False else (None, state)  # final state only needed at prefill
+    y = core.reshape(b, s, inner)
+    y = L.group_norm(y, nh) * (1.0 + mp["gn"].astype(jnp.float32))
+    y = y.astype(h.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    return h + jnp.einsum("bsi,id->bsd", y, mp["w_down"]), fin
+
+
+def _slstm_block_seq(sp, cfg, h, sh, state=None):
+    d, _, nh, _, hd_s, ff = dims(cfg)
+    b, s, _ = h.shape
+    x = L.rms_norm(h, sp["ln"])
+    xw = jnp.einsum("bsd,dghk->bsghk", x.astype(jnp.float32), sp["w_x"]) \
+        + sp["b"]
+    if state is None:
+        state = ssm_lib.slstm_init_state(b, nh, hd_s)
+    hs, fin = ssm_lib.slstm_scan(xw, sp["r"], state)
+    y = hs.reshape(b, s, d).astype(h.dtype)
+    y = L.group_norm(y, nh) * (1.0 + sp["gn"].astype(jnp.float32))
+    y = y.astype(h.dtype)
+    y = jnp.einsum("bsf,fd->bsd",
+                   jax.nn.gelu(jnp.einsum("bsd,df->bsf", y, sp["ffn_wi"])
+                               .astype(jnp.float32)).astype(h.dtype),
+                   sp["ffn_wo"])
+    return h + y, fin
+
+
+def forward(params, cfg: ArchConfig, tokens, *, sh=lambda x, a: x,
+            shw=None, remat=False, collect_cache=False):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = sh(h, ("batch", "seq", "embed"))
+    b, s = tokens.shape
+    _, inner, nh, hd_m, hd_s, _ = dims(cfg)
+    pair_ax = _pair_axes(cfg)
+
+    def pair(h, pp):
+        if shw is not None:
+            pp = shw(pp, pair_ax)
+        m_st = ssm_lib.mlstm_init_state(b, nh, hd_m)
+        h, m_fin = _mlstm_block_seq(pp["mlstm"], cfg, h, sh, m_st,
+                                    chunked=collect_cache or s > 4096)
+        h, s_fin = _slstm_block_seq(pp["slstm"], cfg, h, sh)
+        h = sh(h, ("batch", "seq", "embed"))
+        return h, (m_fin, s_fin) if collect_cache else None
+
+    body = pair
+    if remat:
+        body = jax.checkpoint(
+            pair, policy=jax.checkpoint_policies.nothing_saveable)
+    h, states = jax.lax.scan(body, h, params["pairs"])
+    h = L.rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["embed"].T)
+    logits = sh(logits, ("batch", "seq", "vocab"))
+    return logits, states, 0.0
+
+
+def init_cache(cfg: ArchConfig, batch: int, **_):
+    _, inner, nh, hd_m, hd_s, _ = dims(cfg)
+    p = n_pairs(cfg)
+
+    def rep(x):
+        return jnp.zeros((p,) + x.shape, x.dtype) if x is not None else None
+    m = ssm_lib.mlstm_init_state(batch, nh, hd_m)
+    s = ssm_lib.slstm_init_state(batch, nh, hd_s)
+    return {
+        "mC": jnp.zeros((p, batch, nh, hd_m, hd_m), jnp.float32),
+        "mn": jnp.zeros((p, batch, nh, hd_m), jnp.float32),
+        "mm": jnp.full((p, batch, nh), -1e30, jnp.float32),
+        "sc": jnp.zeros((p, batch, nh, hd_s), jnp.float32),
+        "sn": jnp.zeros((p, batch, nh, hd_s), jnp.float32),
+        "sm": jnp.full((p, batch, nh, hd_s), -1e30, jnp.float32),
+        "sh": jnp.zeros((p, batch, nh, hd_s), jnp.float32),
+    }
+
+
+def cache_axes(cfg: ArchConfig):
+    return {"mC": ("layers", "batch", "heads", "head_dim", "head_dim2"),
+            "mn": ("layers", "batch", "heads", "head_dim"),
+            "mm": ("layers", "batch", "heads"),
+            "sc": ("layers", "batch", "heads", "head_dim"),
+            "sn": ("layers", "batch", "heads", "head_dim"),
+            "sm": ("layers", "batch", "heads", "head_dim"),
+            "sh": ("layers", "batch", "heads", "head_dim")}
+
+
+def prefill(params, cfg: ArchConfig, tokens, *, sh=lambda x, a: x):
+    logits, states, _ = forward(params, cfg, tokens, sh=sh,
+                                collect_cache=True)
+    m_fin, s_fin = states
+    cache = {"mC": m_fin.C, "mn": m_fin.n, "mm": m_fin.m,
+             "sc": s_fin.c, "sn": s_fin.n, "sm": s_fin.m, "sh": s_fin.h}
+    b = tokens.shape[0]
+    pos = jnp.full((b,), tokens.shape[1] - 1, jnp.int32)
+    return logits[:, -1], cache, pos
+
+
+def decode_step(params, cfg: ArchConfig, cache, token, *,
+                sh=lambda x, a: x):
+    b = token.shape[0]
+    d, inner, nh, hd_m, hd_s, ff = dims(cfg)
+    h = jnp.take(params["embed"], token, axis=0)       # (B, D)
+
+    def pair(h, xs):
+        pp, mC, mn, mm, sc, sn, sm, shh = xs
+        mp, sp = pp["mlstm"], pp["slstm"]
+        # ---- mLSTM step
+        x = L.rms_norm(h, mp["ln"])
+        up = jnp.einsum("bd,dgi->bgi", x, mp["w_up"])
+        u, z = up[:, 0], up[:, 1]
+        q = jnp.einsum("bi,ihk->bhk", u, mp["wq"])
+        k = jnp.einsum("bi,ihk->bhk", u, mp["wk"])
+        v = jnp.einsum("bi,ihk->bhk", u, mp["wv"])
+        i_raw = jnp.einsum("bi,ih->bh", u.astype(jnp.float32), mp["w_i"]) \
+            + mp["b_i"]
+        f_raw = jnp.einsum("bi,ih->bh", u.astype(jnp.float32), mp["w_f"]) \
+            + mp["b_f"]
+        st = ssm_lib.MLSTMState(C=mC, n=mn, m=mm)
+        out, st2 = ssm_lib.mlstm_recurrent(q, k, v, i_raw, f_raw, st)
+        y = out.reshape(b, inner)
+        y = L.group_norm(y, nh) * (1.0 + mp["gn"].astype(jnp.float32))
+        y = y.astype(h.dtype) * jax.nn.silu(
+            z.astype(jnp.float32)).astype(h.dtype)
+        h = h + jnp.einsum("bi,id->bd", y, mp["w_down"])
+        # ---- sLSTM step
+        x = L.rms_norm(h, sp["ln"])
+        xw = jnp.einsum("bd,dghk->bghk", x.astype(jnp.float32), sp["w_x"]) \
+            + sp["b"]
+        sst = ssm_lib.SLSTMState(c=sc, n=sn, m=sm, h=shh)
+        sst2 = ssm_lib.slstm_step(xw, sp["r"], sst)
+        y = sst2.h.reshape(b, d).astype(h.dtype)
+        y = L.group_norm(y, nh) * (1.0 + sp["gn"].astype(jnp.float32))
+        y = y.astype(h.dtype)
+        y = jnp.einsum("bf,fd->bd",
+                       jax.nn.gelu(jnp.einsum("bd,df->bf", y, sp["ffn_wi"])
+                                   .astype(jnp.float32)).astype(h.dtype),
+                       sp["ffn_wo"])
+        h = h + y
+        return h, (st2.C, st2.n, st2.m, sst2.c, sst2.n, sst2.m, sst2.h)
+
+    xs = (params["pairs"], cache["mC"], cache["mn"], cache["mm"],
+          cache["sc"], cache["sn"], cache["sm"], cache["sh"])
+    h, ys = jax.lax.scan(pair, h, xs)
+    new_cache = {"mC": ys[0], "mn": ys[1], "mm": ys[2], "sc": ys[3],
+                 "sn": ys[4], "sm": ys[5], "sh": ys[6]}
+    h = L.rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("bd,dv->bv", h, params["embed"].T)
+    return logits, new_cache

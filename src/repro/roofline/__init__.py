@@ -1,0 +1,6 @@
+from repro.roofline.analysis import (Roofline, analyze, collective_bytes,
+                                     model_flops_for, PEAK_FLOPS, HBM_BW,
+                                     LINK_BW)
+
+__all__ = ["Roofline", "analyze", "collective_bytes", "model_flops_for",
+           "PEAK_FLOPS", "HBM_BW", "LINK_BW"]

@@ -1,0 +1,360 @@
+"""HLO text profiler: loop-aware flops / bytes / collective accounting.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE — useless
+for scan-over-layers models (an 80-layer scan under-counts by 80x).  This
+module parses post-optimization HLO text, builds the computation call graph,
+extracts loop trip counts from scan conditions, and propagates a
+*multiplicity* to every computation:
+
+    entry            x1
+    while body/cond  x trip_count (nested loops multiply)
+    fusion/call      x caller multiplicity
+
+It then accounts, per computation and scaled by multiplicity:
+  * dot FLOPs   — 2 * prod(out_shape) * prod(contracted lhs dims),
+  * bytes       — operand + output bytes of scope-level instructions
+                  (the HBM-traffic proxy XLA itself uses, post-fusion),
+  * collectives — ring-model wire bytes (see analysis.collective_bytes).
+
+All quantities are per-device (the SPMD module is per-device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "token": 0,
+    "u1": 0.125, "s1": 0.125,
+}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-_]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-_]+)\s*=\s*(.*)$")
+_SHAPE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OPNAME = re.compile(r"%([\w\.\-_]+)")
+_CALL_ATTR = re.compile(
+    r"(?:calls|to_apply|body|condition)=%?([\w\.\-_]+)")
+_WHILE = re.compile(r"\bwhile\(")
+_CONST_INT = re.compile(r"=\s*s(?:32|64)\[\]\s*constant\((\d+)\)")
+_COLL = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_DOT = re.compile(r"\bdot\(")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_OPKIND = re.compile(
+    r"(?:\}|\]|\))\s+([a-z][a-z0-9\-\.]*)\(|^([a-z][a-z0-9\-]*)\(")
+
+# ops that move no HBM bytes themselves (aliases / metadata / control)
+_ZERO_BYTE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "while", "conditional",
+    "custom-call", "rng-get-and-update-state", "infeed", "outfeed",
+    "opt-barrier",
+}
+# ops whose traffic ~= 2x their output (read out-size, write out-size)
+_OUT2_OPS = {
+    "copy", "convert", "transpose", "reshape", "slice", "dynamic-slice",
+    "broadcast", "iota", "reverse", "reduce", "concatenate", "pad",
+    "gather", "select", "compare", "add", "subtract", "multiply", "divide",
+    "maximum", "minimum", "exponential", "tanh", "negate", "abs", "and",
+    "or", "not", "sort", "rsqrt", "sqrt", "log", "clamp",
+}
+
+
+def opkind(rhs: str) -> str:
+    m = _OPKIND.search(rhs)
+    if m:
+        return m.group(1) or m.group(2)
+    return "?"
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[float, float]:
+    """Total (elements, bytes) over every TYPE[dims] in the string."""
+    elems = byts = 0.0
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _out_type(rhs: str) -> str:
+    """The output type part of an instruction RHS (before the op name)."""
+    # rhs looks like: "f32[512,512]{1,0} dot(%a, %b), ..." or
+    # "(s32[], f32[...]) while(%tuple), ..."
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rhs[:i + 1]
+    m = _SHAPE.search(rhs)
+    if m and m.start() < 40:
+        # include layout braces; cut at first space after shape
+        end = rhs.find(" ", m.start())
+        return rhs[:end if end > 0 else len(rhs)]
+    return ""
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    rhs: str
+    out_bytes: float
+    out_elems: float
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: Dict[str, Instruction]
+    lines: List[str]
+    is_fusion_like: bool = False       # called via calls=/to_apply=
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(2), {}, [])
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        mi = _INSTR.match(line)
+        if mi:
+            name, rhs = mi.group(1), mi.group(2)
+            ot = _out_type(rhs)
+            elems, byts = _shape_elems_bytes(ot)
+            cur.instructions[name] = Instruction(name, rhs, byts, elems)
+            cur.lines.append(line)
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    """Scan conditions compare the induction var against a constant."""
+    best = 1
+    for line in cond.lines:
+        m = _CONST_INT.search(line)
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _leading_dim(rhs: str) -> int:
+    m = _SHAPE.search(rhs)
+    if m and m.group(2):
+        return int(m.group(2).split(",")[0])
+    return 0
+
+
+def _scan_scaled(inst_rhs: str, byts: float, trip: int) -> float:
+    """Inside a while body with trip count T, tensors whose leading dim is
+    T are stacked scan xs/ys: each iteration touches 1/T of them (the
+    dynamic-slice/update-slice reads/writes one layer's slice)."""
+    if trip > 1 and _leading_dim(inst_rhs) == trip:
+        return byts / trip
+    return byts
+
+
+def _resolve_operand_bytes(comp: Computation, rhs: str,
+                           trip: int = 1) -> float:
+    """Sum bytes of operands named inside the call parens (scan-aware)."""
+    p0 = rhs.find("(")
+    if p0 < 0:
+        return 0.0
+    depth, end = 0, len(rhs)
+    for i in range(p0, len(rhs)):
+        if rhs[i] == "(":
+            depth += 1
+        elif rhs[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    total = 0.0
+    for opname in _OPNAME.findall(rhs[p0:end]):
+        inst = comp.instructions.get(opname)
+        if inst is not None:
+            total += _scan_scaled(inst.rhs, inst.out_bytes, trip)
+    return total
+
+
+def _dot_flops(comp: Computation, inst: Instruction) -> float:
+    m = _CONTRACT.search(inst.rhs)
+    contract = 1.0
+    ops = _OPNAME.findall(inst.rhs[inst.rhs.find("("):])
+    lhs = comp.instructions.get(ops[0]) if ops else None
+    if m and lhs is not None:
+        smatch = _SHAPE.search(lhs.rhs)
+        if smatch:
+            dims = [int(d) for d in smatch.group(2).split(",") if d]
+            for di in (int(x) for x in m.group(1).split(",") if x):
+                if di < len(dims):
+                    contract *= dims[di]
+    return 2.0 * inst.out_elems * contract
+
+
+def _coll_wire_bytes(line: str, inst: Instruction, comp: Computation,
+                     n_devices: int) -> Tuple[str, float]:
+    m = _COLL.search(line)
+    kind, is_start = m.group(1), bool(m.group(2))
+    g = n_devices
+    mg = _GROUPS_IOTA.search(line)
+    if mg:
+        g = max(int(mg.group(2)), 1)
+    else:
+        mg = _GROUPS_LIST.search(line)
+        if mg:
+            g = max(len(mg.group(1).split(",")), 1)
+    f = inst.out_bytes
+    if is_start:
+        # (in, out, ...) tuple: full buffer = largest single shape
+        shapes = [_shape_elems_bytes(f"{d}[{s}]")[1]
+                  for d, s in _SHAPE.findall(_out_type(inst.rhs))]
+        f = max(shapes) if shapes else f
+    if kind == "all-reduce":
+        wire = 2.0 * f * (g - 1) / g
+    elif kind == "reduce-scatter":
+        full = f if is_start else f * g
+        wire = full * (g - 1) / g
+    elif kind == "collective-permute":
+        wire = f
+    else:
+        wire = f * (g - 1) / g
+    return kind, wire
+
+
+# jax op_name metadata marking ops that a Pallas kernel keeps in VMEM on
+# the target hardware (attention score tiles, mLSTM decay matrices, SSM
+# scan intermediates).  Their HLO-level HBM traffic is an artifact of the
+# portable jnp fallback; the roofline reports raw and kernel-adjusted terms.
+KERNEL_TAGS = ("chunked_attention", "full_attention", "decode_attention",
+               "mlstm_parallel", "mlstm_chunkwise", "selective_scan",
+               "mlstm_block", "kv_dequant")
+_METADATA_OPNAME = re.compile(r'op_name="([^"]*)"')
+
+
+@dataclasses.dataclass
+class HLOProfile:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_breakdown: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    loop_trips: Dict[str, int] = dataclasses.field(default_factory=dict)
+    kernel_bytes: float = 0.0          # bytes inside KERNEL_TAGS regions
+    kernel_coll_bytes: float = 0.0     # collectives inside those regions
+
+    def add_coll(self, kind: str, b: float):
+        self.coll_bytes += b
+        self.coll_breakdown[kind] = self.coll_breakdown.get(kind, 0.0) + b
+
+
+def _kernel_tagged(rhs: str) -> bool:
+    m = _METADATA_OPNAME.search(rhs)
+    if not m:
+        return False
+    op = m.group(1)
+    return any(t in op for t in KERNEL_TAGS)
+
+
+def profile(text: str, n_devices: int = 2) -> HLOProfile:
+    comps, entry = parse_module(text)
+    prof = HLOProfile()
+    if entry not in comps:
+        return prof
+
+    # which computations are fusion-like (byte traffic counted at caller)?
+    fusion_called: set = set()
+    for comp in comps.values():
+        for line in comp.lines:
+            if " fusion(" in line or " call(" in line or \
+                    "kind=kLoop" in line or "kind=kInput" in line or \
+                    "kind=kOutput" in line:
+                for callee in _CALL_ATTR.findall(line):
+                    if "while(" not in line:
+                        fusion_called.add(callee)
+
+    def visit(name: str, mult: float, trip: int = 1):
+        """trip: trip count of the *immediately enclosing* while loop
+        (1 at entry) — used to recognize stacked scan xs/ys tensors."""
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for inst in comp.instructions.values():
+            line_l = inst.rhs
+            kind_op = opkind(line_l)
+            # --- collectives
+            if _COLL.search(line_l) and "-done" not in line_l[:40]:
+                ckind, wire = _coll_wire_bytes(line_l, inst, comp,
+                                               n_devices)
+                prof.add_coll(ckind, wire * mult)
+                if _kernel_tagged(line_l):
+                    prof.kernel_coll_bytes += wire * mult
+            # --- dot flops (fusion-internal dots visited via recursion)
+            if kind_op == "dot":
+                prof.flops += _dot_flops(comp, inst) * mult
+            # --- bytes at scope level, op-kind aware
+            if name not in fusion_called and \
+                    kind_op not in _ZERO_BYTE_OPS:
+                out_b = _scan_scaled(line_l, inst.out_bytes, trip)
+                if kind_op in ("dynamic-update-slice", "scatter"):
+                    # in-place update: traffic = 2x the update payload —
+                    # operands are (buffer > update > indices); the
+                    # median operand is the update
+                    ops = _OPNAME.findall(
+                        line_l[line_l.find("("):])
+                    cands = sorted(comp.instructions[o].out_bytes
+                                   for o in ops
+                                   if o in comp.instructions)
+                    b = 2.0 * (cands[len(cands) // 2] if cands
+                               else out_b)
+                elif kind_op in _OUT2_OPS:
+                    b = 2.0 * out_b
+                else:       # fusion, dot, scatter, rng, ...
+                    b = out_b + _resolve_operand_bytes(comp, line_l,
+                                                       trip)
+                prof.bytes += b * mult
+                if _kernel_tagged(line_l):
+                    prof.kernel_bytes += b * mult
+            # --- recursion into whiles and calls
+            if kind_op == "while":
+                mb = re.search(r"body=%?([\w\.\-_]+)", line_l)
+                mc = re.search(r"condition=%?([\w\.\-_]+)", line_l)
+                body = mb.group(1) if mb else None
+                cond = mc.group(1) if mc else None
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                prof.loop_trips[body or "?"] = trips
+                if body:
+                    visit(body, mult * trips, trips)
+            else:
+                for callee in _CALL_ATTR.findall(line_l):
+                    if callee in comps:
+                        visit(callee, mult, trip)
+
+    visit(entry, 1.0)
+    return prof

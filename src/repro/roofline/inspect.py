@@ -1,0 +1,113 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Hillclimbing profiler: rank collective / dot / byte hot spots in a
+cell's compiled HLO by (cost x loop multiplicity), attributed to jax
+op_name paths.  This is the dry-run substitute for a wall-clock profile.
+
+    PYTHONPATH=src python -m repro.roofline.inspect --arch mixtral-8x22b \
+        --shape train_4k [--mesh single] [--top 15] [--strategy ...]
+"""
+import argparse
+import re
+from collections import defaultdict
+
+
+def inspect(arch: str, shape_name: str, mesh_kind: str = "single",
+            strategy: str = "", top: int = 15):
+    import jax
+    from repro.configs import get_config, SHAPES
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import lower_cell
+    from repro.roofline import hlo_profile as hp
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    lowered, info = lower_cell(cfg, shape, mesh,
+                               strategy_override=strategy)
+    compiled = lowered.compile()
+    text = compiled.as_text()
+    comps, entry = hp.parse_module(text)
+    n_dev = mesh.devices.size
+
+    colls, dots = [], []
+    byte_by_op = defaultdict(float)
+
+    fusion_called = set()
+    for comp in comps.values():
+        for line in comp.lines:
+            if " fusion(" in line or " call(" in line or "kind=k" in line:
+                for callee in hp._CALL_ATTR.findall(line):
+                    if "while(" not in line:
+                        fusion_called.add(callee)
+
+    def meta(rhs):
+        m = re.search(r'op_name="([^"]*)"', rhs)
+        return (m.group(1) if m else "?")
+
+    def visit(name, mult, trip=1):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for inst in comp.instructions.values():
+            rhs = inst.rhs
+            kind_op = hp.opkind(rhs)
+            if hp._COLL.search(rhs) and "-done" not in rhs[:40]:
+                ckind, wire = hp._coll_wire_bytes(rhs, inst, comp, n_dev)
+                colls.append((wire * mult, ckind, meta(rhs)[-110:]))
+            if kind_op == "dot":
+                dots.append((hp._dot_flops(comp, inst) * mult,
+                             meta(rhs)[-110:]))
+            if name not in fusion_called and \
+                    kind_op not in hp._ZERO_BYTE_OPS:
+                out_b = hp._scan_scaled(rhs, inst.out_bytes, trip)
+                if kind_op in hp._OUT2_OPS:
+                    b = 2.0 * out_b
+                else:
+                    b = out_b + hp._resolve_operand_bytes(comp, rhs, trip)
+                key = meta(rhs)
+                # collapse to the function-level scope
+                key = re.sub(r"\[\d+\]", "", key)[-110:]
+                byte_by_op[key] += b * mult
+            if kind_op == "while":
+                mb = re.search(r"body=%?([\w\.\-_]+)", rhs)
+                mc = re.search(r"condition=%?([\w\.\-_]+)", rhs)
+                trips = hp._trip_count(comps[mc.group(1)]) \
+                    if mc and mc.group(1) in comps else 1
+                if mb:
+                    visit(mb.group(1), mult * trips, trips)
+            else:
+                for callee in hp._CALL_ATTR.findall(rhs):
+                    if callee in comps:
+                        visit(callee, mult, trip)
+
+    visit(entry, 1.0)
+    print(f"=== {arch} x {shape_name} x {mesh_kind} "
+          f"(strategy={info['strategy']}) ===")
+    print(f"\n-- top collectives by wire bytes/chip "
+          f"(total {sum(c[0] for c in colls)/2**30:.1f} GiB) --")
+    for wire, kind, m in sorted(colls, key=lambda x: -x[0])[:top]:
+        print(f"  {wire/2**30:9.2f} GiB  {kind:18s} {m}")
+    print(f"\n-- top dots by flops/chip "
+          f"(total {sum(d[0] for d in dots):.2e}) --")
+    for f, m in sorted(dots, key=lambda x: -x[0])[:top]:
+        print(f"  {f:9.2e}  {m}")
+    print("\n-- top byte scopes --")
+    for k, v in sorted(byte_by_op.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"  {v/2**30:9.2f} GiB  {k}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--strategy", default="")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+    inspect(args.arch, args.shape, args.mesh, args.strategy, args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from repro.serving.engine import InferenceEngine, EngineConfig, EngineFailure
+from repro.serving.request import Request, RequestState
+from repro.serving.sampler import SamplingParams
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+__all__ = ["InferenceEngine", "EngineConfig", "EngineFailure", "Request",
+           "RequestState", "SamplingParams", "Scheduler", "SchedulerConfig"]

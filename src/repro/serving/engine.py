@@ -1,0 +1,228 @@
+"""Continuous-batching inference engine — the Ollama analogue each backend
+node runs, one per deployed model instance.
+
+Fully GPU/TPU-accelerated path (no CPU fallback, per the paper): prefill and
+decode are jitted; weights may be held quantized (int8/int4) at rest and
+dequantized on-chip per step.  A fixed slot pool gives O(1) admission,
+batched decode over all active slots, and exact byte accounting for the SDAI
+controller's VRAM-aware placement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import build
+from repro.serving import quantization as q_lib
+from repro.serving.kv_cache import SlotPool, write_slot, cache_bytes
+from repro.serving.request import Request, RequestState
+from repro.serving.sampler import SamplingParams
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    n_slots: int = 4
+    max_len: int = 128
+    quantize: str = ""            # "", "int8", "int4"
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+
+class EngineFailure(RuntimeError):
+    pass
+
+
+class InferenceEngine:
+    """One model instance on one node."""
+
+    def __init__(self, cfg: ArchConfig, params, engine_cfg: EngineConfig,
+                 scheduler: Optional[Scheduler] = None):
+        self.cfg = cfg
+        self.ecfg = engine_cfg
+        self.model = build(cfg)
+        self.scheduler = scheduler or Scheduler(SchedulerConfig())
+        self.pool = SlotPool(engine_cfg.n_slots, engine_cfg.max_len)
+        self._dead = False
+        self._key = jax.random.PRNGKey(engine_cfg.seed)
+
+        if engine_cfg.quantize:
+            bits = 8 if engine_cfg.quantize == "int8" else 4
+            self.params = q_lib.quantize_tree(params, bits=bits)
+            self._dequant = q_lib.dequant_tree
+        else:
+            self.params = params
+            self._dequant = lambda p: p
+
+        src_len = engine_cfg.max_len if cfg.is_encdec else 0
+        self.cache = self.model.init_cache(
+            engine_cfg.n_slots, engine_cfg.max_len, src_len=src_len)
+        self.slot_req: Dict[int, Request] = {}
+        self.pos = jnp.zeros((engine_cfg.n_slots,), jnp.int32)
+        self.last_tok = jnp.zeros((engine_cfg.n_slots,), jnp.int32)
+        # metrics
+        self.total_tokens = 0
+        self.total_steps = 0
+        self.step_ewma_s = 0.0
+        self._build_steps()
+
+    # ------------------------------------------------------------- #
+    def _build_steps(self):
+        model, cfg, ecfg = self.model, self.cfg, self.ecfg
+
+        def prefill_one(params, tokens, extra):
+            p = self._dequant(params)
+            return model.prefill(p, tokens, cache_len=ecfg.max_len,
+                                 **extra)
+
+        def decode_batch(params, cache, token, pos, temps, key):
+            p = self._dequant(params)
+            logits, new_cache = model.decode(p, cache, token, pos)
+            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            lg = logits.astype(jnp.float32) / jnp.maximum(
+                temps[:, None], 1e-6)
+            if ecfg.top_k > 0:
+                kth = jax.lax.top_k(lg, ecfg.top_k)[0][..., -1:]
+                lg = jnp.where(lg < kth, -1e30, lg)
+            sampled = jax.random.categorical(key, lg, axis=-1)
+            tok = jnp.where(temps > 0, sampled.astype(jnp.int32), greedy)
+            return tok, new_cache
+
+        self._prefill_one = jax.jit(prefill_one)
+        self._decode_batch = jax.jit(decode_batch, donate_argnums=(1,))
+
+    # ------------------------------------------------------------- #
+    def _extra_inputs(self, batch: int):
+        extra = {}
+        dt = jnp.bfloat16 if self.cfg.dtype == "bf16" else jnp.float32
+        if self.cfg.frontend == "vision":
+            extra["prefix_embeds"] = jnp.zeros(
+                (batch, self.cfg.n_prefix_tokens, self.cfg.d_model), dt)
+        if self.cfg.is_encdec:
+            extra["src_embeds"] = jnp.zeros(
+                (batch, self.ecfg.max_len, self.cfg.d_model), dt)
+        return extra
+
+    def submit(self, req: Request) -> bool:
+        if self._dead:
+            req.finish(error="engine dead")
+            return False
+        return self.scheduler.submit(req)
+
+    def fail(self):
+        """Failure injection: node/instance crash."""
+        self._dead = True
+        for req in list(self.slot_req.values()):
+            req.finish(error="engine crashed")
+        for req in self.scheduler.queue:
+            req.finish(error="engine crashed")
+        self.scheduler.queue.clear()
+
+    @property
+    def alive(self) -> bool:
+        return not self._dead
+
+    @property
+    def n_active(self) -> int:
+        return self.pool.n_active
+
+    @property
+    def load(self) -> float:
+        """Active slots + queue pressure, for least-loaded routing."""
+        return self.pool.n_active + self.scheduler.depth
+
+    # ------------------------------------------------------------- #
+    def step(self) -> int:
+        """One engine iteration: admit prefills, one batched decode.
+        Returns number of tokens emitted."""
+        if self._dead:
+            raise EngineFailure("engine is dead")
+        t0 = time.monotonic()
+        # ---- admissions
+        for req in self.scheduler.next_prefills(len(self.pool.free)):
+            slot = self.pool.alloc(req.request_id, len(req.prompt))
+            if slot is None:
+                req.finish(error="no capacity")
+                continue
+            req.state = RequestState.PREFILLING
+            tokens = jnp.asarray([req.prompt], jnp.int32)
+            extra = self._extra_inputs(1)
+            logits, one_cache, pos1 = self._prefill_one(
+                self.params, tokens, extra)
+            self.cache = write_slot(self.cache, one_cache, slot)
+            first = int(jnp.argmax(logits[0]))
+            if req.sampling.temperature > 0:
+                self._key, sk = jax.random.split(self._key)
+                lg = logits[0].astype(jnp.float32) / \
+                    req.sampling.temperature
+                first = int(jax.random.categorical(sk, lg))
+            req.first_token_at = time.monotonic()
+            req.output.append(first)
+            req.state = RequestState.DECODING
+            self.slot_req[slot] = req
+            self.pos = self.pos.at[slot].set(int(pos1[0]) + 1)
+            self.last_tok = self.last_tok.at[slot].set(first)
+            self.total_tokens += 1
+            self._maybe_finish(slot, first)
+        # ---- batched decode
+        emitted = 0
+        if self.slot_req:
+            temps = jnp.asarray(
+                [self.slot_req[s].sampling.temperature
+                 if s in self.slot_req else 0.0
+                 for s in range(self.ecfg.n_slots)], jnp.float32)
+            self._key, sk = jax.random.split(self._key)
+            toks, self.cache = self._decode_batch(
+                self.params, self.cache, self.last_tok, self.pos, temps,
+                sk)
+            toks_host = jax.device_get(toks)
+            active = list(self.slot_req.items())
+            for slot, req in active:
+                tok = int(toks_host[slot])
+                req.output.append(tok)
+                self.pool.advance(slot)
+                emitted += 1
+                self.total_tokens += 1
+                self.last_tok = self.last_tok.at[slot].set(tok)
+                self._maybe_finish(slot, tok)
+            adv = jnp.zeros((self.ecfg.n_slots,), jnp.int32)
+            for slot, _ in active:
+                adv = adv.at[slot].set(1)
+            self.pos = self.pos + adv
+        self.total_steps += 1
+        dt = time.monotonic() - t0
+        self.step_ewma_s = 0.9 * self.step_ewma_s + 0.1 * dt \
+            if self.total_steps > 1 else dt
+        return emitted
+
+    def _maybe_finish(self, slot: int, tok: int):
+        req = self.slot_req.get(slot)
+        if req is None:
+            return
+        done = (len(req.output) >= req.sampling.max_tokens or
+                (req.sampling.eos_id >= 0 and tok == req.sampling.eos_id))
+        if done:
+            req.finish()
+            del self.slot_req[slot]
+            self.pool.release(slot)
+
+    def run_until_done(self, max_steps: int = 10_000) -> int:
+        steps = 0
+        while (self.slot_req or self.scheduler.depth) and \
+                steps < max_steps:
+            self.step()
+            steps += 1
+        return steps
+
+    # ------------------------------------------------------------- #
+    def memory_report(self) -> Dict[str, int]:
+        return {
+            "param_bytes": q_lib.tree_bytes(self.params),
+            "cache_bytes": cache_bytes(self.cache),
+        }

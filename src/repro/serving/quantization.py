@@ -1,0 +1,94 @@
+"""Weight quantization — the Ollama-GGUF analogue that lets AIvailable pack
+models into small/legacy VRAM budgets.
+
+int8 (per-output-channel absmax) and packed int4.  `quantize_tree` converts a
+param pytree so *quantized weights are what lives in HBM*; `dequant_tree` is
+called inside the jitted step so dequantization happens on-chip per use
+(weights stay int8 at rest — this is the memory the placement controller
+accounts).  The perf-critical dequant-matmul has a Pallas kernel in
+`repro/kernels/int8_matmul`.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+_QKEY = "__q__"
+
+
+def quantize_array(w, bits: int = 8):
+    """Per-last-dim-channel absmax quantization.  Returns dict leaf."""
+    wf = w.astype(jnp.float32)
+    red = tuple(range(w.ndim - 1))
+    amax = jnp.max(jnp.abs(wf), axis=red, keepdims=True)
+    if bits == 8:
+        scale = jnp.maximum(amax, 1e-8) / 127.0
+        q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+        return {_QKEY: q, "scale": scale.astype(jnp.float32),
+                "dtype": jnp.zeros((), w.dtype), "bits8": jnp.zeros((0,))}
+    if bits == 4:
+        scale = jnp.maximum(amax, 1e-8) / 7.0
+        q = jnp.clip(jnp.round(wf / scale), -7, 7).astype(jnp.int8)
+        # pack two int4 per int8 along the leading axis (must be even)
+        if q.shape[0] % 2 == 0:
+            lo = q[0::2] & 0x0F
+            hi = (q[1::2] & 0x0F) << 4
+            packed = (lo | hi).astype(jnp.int8)
+            return {_QKEY: packed, "scale": scale.astype(jnp.float32),
+                    "dtype": jnp.zeros((), w.dtype), "bits4": jnp.zeros((0,))}
+        return {_QKEY: q, "scale": scale.astype(jnp.float32),
+                "dtype": jnp.zeros((), w.dtype), "bits8": jnp.zeros((0,))}
+    raise ValueError(f"bits={bits}")
+
+
+def dequantize_array(leaf: Dict):
+    q, scale = leaf[_QKEY], leaf["scale"]
+    dt = leaf["dtype"].dtype
+    if "bits4" in leaf:
+        lo = (q << 4) >> 4             # sign-extend low nibble
+        hi = q >> 4
+        full = jnp.stack([lo, hi], axis=1).reshape(
+            (q.shape[0] * 2,) + q.shape[1:])
+        return (full.astype(jnp.float32) * scale).astype(dt)
+    return (q.astype(jnp.float32) * scale).astype(dt)
+
+
+def is_quantized_leaf(x) -> bool:
+    return isinstance(x, dict) and _QKEY in x
+
+
+def quantize_tree(params: PyTree, bits: int = 8,
+                  skip: Optional[Callable[[Any], bool]] = None) -> PyTree:
+    """Quantize every >=2D float leaf (norm scales & biases stay as-is)."""
+    def q(x):
+        if skip is not None and skip(x):
+            return x
+        if hasattr(x, "ndim") and x.ndim >= 2 and \
+                jnp.issubdtype(x.dtype, jnp.floating):
+            return quantize_array(x, bits)
+        return x
+    return jax.tree.map(q, params)
+
+
+def dequant_tree(params: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda x: dequantize_array(x) if is_quantized_leaf(x) else x,
+        params, is_leaf=is_quantized_leaf)
+
+
+def tree_bytes(params: PyTree) -> int:
+    """Actual at-rest bytes of a (possibly quantized) param tree."""
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def quantized_matmul_ref(x, q, scale):
+    """x @ dequant(q): pure-jnp oracle for the Pallas int8 kernel.
+    x: (..., K); q: (K, N) int8; scale: (1, N) or (K? broadcast) f32."""
+    w = q.astype(jnp.float32) * scale
+    return jnp.einsum("...k,kn->...n", x.astype(jnp.float32), w)

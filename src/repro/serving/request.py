@@ -1,0 +1,55 @@
+"""Serving request/response types shared by engine, frontend, and client."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+import time
+from typing import List, Optional
+
+from repro.serving.sampler import SamplingParams
+
+_ids = itertools.count()
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+    FAILED = "failed"
+
+
+@dataclasses.dataclass
+class Request:
+    model: str
+    prompt: List[int]                         # token ids
+    sampling: SamplingParams = SamplingParams()
+    request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    state: RequestState = RequestState.QUEUED
+    output: List[int] = dataclasses.field(default_factory=list)
+    created_at: float = dataclasses.field(default_factory=time.monotonic)
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    error: str = ""
+    # routing metadata (filled by frontend)
+    node: str = ""
+    replica: str = ""
+    retries: int = 0
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.created_at
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.created_at
+
+    def finish(self, error: str = ""):
+        self.finished_at = time.monotonic()
+        self.error = error
+        self.state = RequestState.FAILED if error else RequestState.FINISHED

@@ -1,0 +1,34 @@
+"""Token sampling: greedy / temperature / top-k / top-p, batched & jittable."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0          # 0 => greedy
+    top_k: int = 0                    # 0 => off
+    top_p: float = 1.0                # 1 => off
+    max_tokens: int = 64
+    eos_id: int = -1                  # -1 => never stops on token
+
+
+def sample(logits, key, params: SamplingParams):
+    """logits: (B, V) -> tokens (B,) int32."""
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32) / params.temperature
+    if params.top_k > 0:
+        kth = jax.lax.top_k(lg, params.top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, -1e30, lg)
+    if params.top_p < 1.0:
+        sorted_lg = jnp.sort(lg, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_lg, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < params.top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_lg, cutoff_idx, axis=-1)
+        lg = jnp.where(lg < cutoff, -1e30, lg)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)

@@ -1,0 +1,47 @@
+"""Request scheduler for the continuous-batching engine.
+
+FCFS admission with prefill/decode interleaving: at each engine step, admit
+up to `max_prefill_per_step` queued requests into free slots, then run one
+batched decode over all active slots.  Tracks queue metrics the SDAI
+controller uses for load-based reallocation decisions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional
+
+from repro.serving.request import Request, RequestState
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    max_prefill_per_step: int = 1
+    max_queue: int = 256
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig = SchedulerConfig()):
+        self.cfg = cfg
+        self.queue: Deque[Request] = deque()
+        self.rejected = 0
+
+    def submit(self, req: Request) -> bool:
+        if len(self.queue) >= self.cfg.max_queue:
+            self.rejected += 1
+            req.finish(error="queue full")
+            return False
+        req.state = RequestState.QUEUED
+        self.queue.append(req)
+        return True
+
+    def next_prefills(self, free_slots: int) -> List[Request]:
+        out = []
+        n = min(free_slots, self.cfg.max_prefill_per_step, len(self.queue))
+        for _ in range(n):
+            out.append(self.queue.popleft())
+        return out
+
+    @property
+    def depth(self) -> int:
+        return len(self.queue)

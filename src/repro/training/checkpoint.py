@@ -1,0 +1,111 @@
+"""Checkpointing: msgpack-serialized pytrees with atomic commits and a
+keep-last-k manager.  This is both the training fault-tolerance substrate
+(checkpoint/restart) and the SDAI controller's model store (the
+"Ollama pull" analogue when re-placing models after a node failure).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _pack_array(a: np.ndarray) -> Dict:
+    if a.dtype == jnp.bfloat16:
+        return {"dtype": "bfloat16", "shape": list(a.shape),
+                "data": a.view(np.uint16).tobytes()}
+    return {"dtype": a.dtype.str, "shape": list(a.shape),
+            "data": a.tobytes()}
+
+
+def _unpack_array(d: Dict) -> np.ndarray:
+    if d["dtype"] == "bfloat16":
+        raw = np.frombuffer(d["data"], np.uint16).reshape(d["shape"])
+        return raw.view(jnp.bfloat16)
+    return np.frombuffer(d["data"], np.dtype(d["dtype"])) \
+        .reshape(d["shape"])
+
+
+def save(tree: PyTree, path: str | Path):
+    """Atomic checkpoint write (tmp file + rename)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = {k: _pack_array(v) for k, v in _flatten(tree).items()}
+    blob = msgpack.packb(flat)
+    with tempfile.NamedTemporaryFile(dir=path.parent, delete=False) as f:
+        f.write(blob)
+        tmp = f.name
+    os.replace(tmp, path)        # atomic commit
+
+
+def restore(path: str | Path, like: PyTree) -> PyTree:
+    """Restore into the structure of `like` (shape/dtype-checked)."""
+    blob = Path(path).read_bytes()
+    flat = {k: _unpack_array(v)
+            for k, v in msgpack.unpackb(blob).items()}
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_k, leaf in leaves_with_path:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path_k)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        out.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str | Path
+    keep: int = 3
+
+    def __post_init__(self):
+        self.directory = Path(self.directory)
+        self.directory.mkdir(parents=True, exist_ok=True)
+
+    def _path(self, step: int) -> Path:
+        return self.directory / f"ckpt_{step:08d}.msgpack"
+
+    def save(self, step: int, tree: PyTree):
+        save(tree, self._path(step))
+        self._gc()
+
+    def latest_step(self) -> Optional[int]:
+        steps = sorted(int(p.stem.split("_")[1])
+                       for p in self.directory.glob("ckpt_*.msgpack"))
+        return steps[-1] if steps else None
+
+    def restore_latest(self, like: PyTree) -> Tuple[Optional[int], PyTree]:
+        step = self.latest_step()
+        if step is None:
+            return None, like
+        return step, restore(self._path(step), like)
+
+    def _gc(self):
+        steps = sorted(int(p.stem.split("_")[1])
+                       for p in self.directory.glob("ckpt_*.msgpack"))
+        for s in steps[:-self.keep]:
+            self._path(s).unlink(missing_ok=True)

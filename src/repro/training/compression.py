@@ -1,0 +1,64 @@
+"""Error-feedback int8 gradient compression (EF-SGD style).
+
+Per-tensor absmax int8 quantization of gradients with an error-feedback
+accumulator: e_{t+1} = (g_t + e_t) - dequant(quant(g_t + e_t)).  The
+accumulated error is re-injected next step, so the compression bias
+vanishes asymptotically (property-tested: ||e|| stays bounded and training
+convergence matches uncompressed within tolerance).
+
+Wire accounting: the DP gradient reduction moves int8 payloads + one f32
+scale per tensor — a 4x reduction vs f32 (2x vs bf16), which
+`benchmarks/bench_compression.py` quantifies against the roofline
+collective term.  (XLA's all-reduce cannot sum int8 payloads natively; on
+real fleets this maps to a quantized ring all-reduce — dequantize-sum-
+requantize per hop, the standard EF-ring construction.)
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def init_error(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(g, e):
+    """One tensor: returns (q int8, scale f32 scalar, new_error f32)."""
+    x = g.astype(jnp.float32) + e
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    x_hat = q.astype(jnp.float32) * scale
+    return q, scale, x - x_hat
+
+
+def decompress(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: PyTree, err: PyTree) -> Tuple[PyTree, PyTree,
+                                                       PyTree]:
+    """Returns ({q, scale} tree, dequantized grads, new error tree)."""
+    qs = jax.tree.map(lambda g, e: compress(g, e), grads, err)
+    q_tree = jax.tree.map(lambda t: t[0], qs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    s_tree = jax.tree.map(lambda t: t[1], qs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    e_tree = jax.tree.map(lambda t: t[2], qs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    deq = jax.tree.map(decompress, q_tree, s_tree)
+    return {"q": q_tree, "scale": s_tree}, deq, e_tree
+
+
+def wire_bytes(tree: PyTree, compressed: bool) -> int:
+    """Bytes a DP ring all-reduce moves per device for this gradient tree."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = leaf.size
+        total += n * (1 if compressed else 4) + (4 if compressed else 0)
+    return 2 * total          # ring all-reduce: 2x payload per device

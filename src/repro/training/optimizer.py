@@ -1,0 +1,154 @@
+"""Optimizers in pure JAX (no optax): AdamW (fp32 moments, bf16 params) and
+Adafactor (sub-linear memory — the legacy-HBM-friendly option, in the spirit
+of the paper's "fully use each node's VRAM").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    """Linear warmup then cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_init(params) -> Dict[str, PyTree]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params)}
+
+
+def adamw_update(params, grads, opt_state, step, cfg: AdamWConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay > 0 and p.ndim >= 2:   # no decay on norms/bias
+            step_ = step_ + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gnorm, "lr": lr}
+
+
+# --------------------------------------------------------------------- #
+# Adafactor (factored second moments; beyond-paper memory saver)
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-2
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+
+
+def adafactor_init(params):
+    def fac(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"fac": jax.tree.map(fac, params,
+                                is_leaf=lambda x: hasattr(x, "shape"))}
+
+
+def adafactor_update(params, grads, opt_state, step, cfg: AdafactorConfig):
+    t = step.astype(jnp.float32) + 1.0
+    beta = 1.0 - t ** (-cfg.decay)
+
+    def upd(p, g, st):
+        g = g.astype(jnp.float32)
+        g2 = g * g + cfg.eps
+        if p.ndim >= 2:
+            vr = beta * st["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * st["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(
+                jnp.mean(vr, axis=-1, keepdims=True), cfg.eps)
+            u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :]
+                     + cfg.eps)
+            st2 = {"vr": vr, "vc": vc}
+        else:
+            v = beta * st["v"] + (1 - beta) * g2
+            u = g / (jnp.sqrt(v) + cfg.eps)
+            st2 = {"v": v}
+        rms = jnp.sqrt(jnp.mean(u * u))
+        u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        return (p.astype(jnp.float32) - cfg.lr * u).astype(p.dtype), st2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    sts = opt_state["fac"]
+    flat_s = [sts[k] if isinstance(sts, dict) else None
+              for k in range(len(flat_p))] if False else None
+    # rebuild via tree to keep structures aligned
+    paired = jax.tree.map(lambda p, g: (p, g), params, grads)
+    out_p, out_s = [], []
+    leaves_ps = jax.tree.leaves(paired, is_leaf=lambda x:
+                                isinstance(x, tuple) and len(x) == 2
+                                and hasattr(x[0], "shape"))
+    leaves_st = jax.tree.leaves(
+        opt_state["fac"], is_leaf=lambda x: isinstance(x, dict)
+        and ("v" in x or "vr" in x))
+    for (p, g), st in zip(leaves_ps, leaves_st):
+        np_, ns = upd(p, g, st)
+        out_p.append(np_)
+        out_s.append(ns)
+    new_p = jax.tree.unflatten(tdef, out_p)
+    st_def = jax.tree.structure(
+        opt_state["fac"], is_leaf=lambda x: isinstance(x, dict)
+        and ("v" in x or "vr" in x))
+    new_fac = jax.tree.unflatten(st_def, out_s)
+    return new_p, {"fac": new_fac}, {}

@@ -1,0 +1,37 @@
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device;
+# only launch/dryrun.py forces the 512-device placeholder fleet.
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_params_store():
+    """Session-cached real params for reduced zoo models."""
+    from repro.models import build
+    cache = {}
+
+    def store(cfg):
+        if cfg.name not in cache:
+            cache[cfg.name] = build(cfg).init(jax.random.PRNGKey(0))
+        return cache[cfg.name]
+    return store
+
+
+@pytest.fixture(scope="session")
+def param_store():
+    return tiny_params_store()

@@ -1,0 +1,129 @@
+"""Service Frontend (HAProxy analogue) + HealthMonitor: routing, load
+balancing fairness, failover, straggler demotion, heartbeat lifecycle."""
+import time
+
+import pytest
+
+from repro.cluster import Fleet, BackendNode
+from repro.configs import ZOO
+from repro.core.frontend import ServiceFrontend, FrontendConfig
+from repro.core.health import HealthMonitor, HealthConfig, NodeHealth
+from repro.core.registry import ReplicaInfo, ReplicaKey, ReplicaRegistry
+from repro.serving.request import Request
+from repro.serving.sampler import SamplingParams
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _stack(n_nodes=3, model="deepseek-r1-7b"):
+    fleet = Fleet([BackendNode(f"n{i}", "v5e-1") for i in range(n_nodes)])
+    clock = FakeClock()
+    monitor = HealthMonitor(HealthConfig(suspect_after=2, dead_after=5),
+                            clock=clock)
+    replicas = ReplicaRegistry()
+    cfg = ZOO[model]
+    for i, node in enumerate(fleet.nodes.values()):
+        inst = node.deploy(cfg, quantize="int8", n_slots=4, max_len=1024,
+                           real=False)
+        replicas.add(ReplicaInfo(ReplicaKey(node.node_id,
+                                            inst.instance_id),
+                                 model, "int8", 4, 1024, inst.bytes))
+        monitor.observe_heartbeat(node.node_id)
+    fe = ServiceFrontend(fleet, replicas, monitor, FrontendConfig())
+    return fleet, monitor, replicas, fe, clock
+
+
+def test_routing_table_lists_healthy():
+    fleet, mon, reps, fe, clock = _stack(3)
+    table = fe.routing_table()
+    assert len(table["deepseek-r1-7b"]) == 3
+
+
+def test_load_balancing_distributes():
+    fleet, mon, reps, fe, clock = _stack(3)
+    for _ in range(30):
+        req = Request(model="deepseek-r1-7b", prompt=[1, 2, 3],
+                      sampling=SamplingParams(max_tokens=2))
+        assert fe.submit(req)
+    counts = fe.stats.per_replica
+    assert len(counts) == 3
+    # accounted-mode requests finish instantly -> near-even spread
+    assert max(counts.values()) - min(counts.values()) <= 12
+
+
+def test_failover_on_node_death():
+    fleet, mon, reps, fe, clock = _stack(2)
+    victim = list(fleet.nodes)[0]
+    fleet.fail_node(victim)
+    for _ in range(5):
+        req = Request(model="deepseek-r1-7b", prompt=[1],
+                      sampling=SamplingParams(max_tokens=2))
+        ok = fe.submit(req)
+        assert ok and req.node != victim
+    assert fe.stats.failed == 0
+
+
+def test_no_backend_rejection():
+    fleet, mon, reps, fe, clock = _stack(1)
+    fleet.fail_node(list(fleet.nodes)[0])
+    req = Request(model="deepseek-r1-7b", prompt=[1])
+    assert not fe.submit(req)
+    assert req.error == "no healthy backend"
+
+
+def test_mark_dead_excludes_from_routing():
+    fleet, mon, reps, fe, clock = _stack(3)
+    victim = list(fleet.nodes)[1]
+    mon.mark_dead(victim)
+    assert all(victim not in k
+               for k in fe.routing_table()["deepseek-r1-7b"])
+    mon.clear_mark(victim)
+    assert any(victim in k
+               for k in fe.routing_table()["deepseek-r1-7b"])
+
+
+def test_heartbeat_lifecycle():
+    clock = FakeClock()
+    mon = HealthMonitor(HealthConfig(suspect_after=2, dead_after=5),
+                        clock=clock)
+    mon.observe_heartbeat("a")
+    assert mon.status("a") == NodeHealth.HEALTHY
+    clock.advance(3)
+    assert mon.status("a") == NodeHealth.SUSPECT
+    assert not mon.heartbeat_expired("a")
+    clock.advance(3)
+    assert mon.heartbeat_expired("a")
+    mon.observe_heartbeat("a")
+    assert mon.status("a") == NodeHealth.HEALTHY
+
+
+def test_straggler_detection():
+    mon = HealthMonitor()
+    for i in range(5):
+        mon.observe_latency(f"r{i}", 0.01)
+    for _ in range(20):
+        mon.observe_latency("slow", 1.0)
+    assert mon.is_straggler("slow")
+    assert not mon.is_straggler("r0")
+
+
+def test_straggler_demoted_in_pick():
+    fleet, mon, reps, fe, clock = _stack(4)
+    keys = [str(r.key) for r in reps.for_model("deepseek-r1-7b")]
+    # make replica 0 a straggler (others healthy)
+    for _ in range(20):
+        mon.observe_latency(keys[0], 2.0)
+        for k in keys[1:]:
+            mon.observe_latency(k, 0.01)
+    picks = [str(fe.pick("deepseek-r1-7b")) for _ in range(9)]
+    assert keys[0] not in picks
+    assert set(picks) == set(keys[1:])      # round-robin over healthy

@@ -1,0 +1,129 @@
+"""Pallas kernel validation: shape/dtype sweeps, assert_allclose against the
+pure-jnp ref.py oracles (interpret=True executes kernel bodies on CPU)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.int8_matmul import int8_matmul
+from repro.serving.quantization import quantize_array
+
+rng = np.random.default_rng(7)
+
+
+def rnd(*s, dt=jnp.float32):
+    return jnp.asarray(rng.standard_normal(s), dt)
+
+
+FLASH_CASES = [
+    # B, H, K, Sq, Skv, hd, win, prefix, dtype
+    (2, 4, 2, 128, 128, 64, 0, 0, jnp.float32),
+    (1, 8, 4, 256, 256, 128, 0, 0, jnp.float32),
+    (2, 4, 1, 128, 256, 64, 64, 0, jnp.float32),
+    (1, 4, 2, 128, 128, 64, 48, 16, jnp.float32),
+    (1, 2, 2, 64, 64, 32, 0, 0, jnp.bfloat16),
+    (1, 6, 2, 192, 192, 64, 0, 0, jnp.float32),   # non-pow2 heads
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_vs_oracle(case):
+    B, H, K, Sq, Skv, hd, win, pre, dt = case
+    q, k, v = rnd(B, H, Sq, hd, dt=dt), rnd(B, K, Skv, hd, dt=dt), \
+        rnd(B, K, Skv, hd, dt=dt)
+    out = flash_attention(q, k, v, causal=True, window=win, prefix=pre,
+                          block_q=64, block_k=64, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True, window=win,
+                                     prefix=pre)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(out.astype(np.float32),
+                               expect.astype(np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_flash_attention_noncausal():
+    q, k, v = rnd(1, 4, 128, 64), rnd(1, 2, 128, 64), rnd(1, 2, 128, 64)
+    out = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                          interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+DECODE_CASES = [
+    # B, K, G, S, hd, win, block_k
+    (2, 2, 4, 512, 64, 0, 128),
+    (4, 8, 8, 256, 128, 0, 128),
+    (2, 1, 4, 512, 64, 128, 128),
+    (1, 4, 2, 1024, 64, 0, 256),
+    (3, 2, 8, 256, 32, 0, 64),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+def test_decode_attention_vs_oracle(case):
+    B, K, G, S, hd, win, bk = case
+    q = rnd(B, K, G, hd)
+    kc, vc = rnd(B, K, S, hd), rnd(B, K, S, hd)
+    pos = jnp.asarray(rng.integers(max(win, 1), S, B), jnp.int32)
+    out = decode_attention(q, kc, vc, pos, window=win, block_k=bk,
+                           interpret=True)
+    expect = ref.decode_attention_ref(q, kc, vc, pos, window=win)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_ragged_positions():
+    """Per-sequence lengths mask correctly (continuous batching)."""
+    B, K, G, S, hd = 4, 2, 2, 512, 64
+    q = rnd(B, K, G, hd)
+    kc, vc = rnd(B, K, S, hd), rnd(B, K, S, hd)
+    pos = jnp.asarray([0, 63, 200, 511], jnp.int32)
+    out = decode_attention(q, kc, vc, pos, block_k=64, interpret=True)
+    expect = ref.decode_attention_ref(q, kc, vc, pos)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+INT8_CASES = [
+    (128, 256, 128, jnp.float32),
+    (256, 512, 256, jnp.bfloat16),
+    (128, 128, 384, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", INT8_CASES)
+def test_int8_matmul_vs_oracle(case):
+    M, K, N, dt = case
+    x = rnd(M, K, dt=dt)
+    w = rnd(K, N) * 0.1
+    qd = quantize_array(w, 8)
+    out = int8_matmul(x, qd["__q__"], qd["scale"], interpret=True)
+    expect = ref.int8_matmul_ref(x, qd["__q__"], qd["scale"])
+    np.testing.assert_allclose(out.astype(np.float32),
+                               expect.astype(np.float32),
+                               atol=5e-2, rtol=5e-2)
+
+
+def test_int8_matmul_quantization_error_bound():
+    """End-to-end quant error stays within the analytic absmax bound."""
+    x = rnd(64, 128)
+    w = rnd(128, 64)
+    qd = quantize_array(w, 8)
+    out = int8_matmul(x, qd["__q__"], qd["scale"], block_m=64, block_n=64,
+                      block_k=64, interpret=True)
+    exact = x @ w
+    # per-element error <= sum_k |x_k| * scale/2
+    bound = jnp.sum(jnp.abs(x), axis=1, keepdims=True) * \
+        jnp.max(qd["scale"]) * 0.5 + 1e-4
+    assert bool(jnp.all(jnp.abs(out - exact) <= bound))
+
+
+def test_ops_wrappers_jit():
+    """Public ops are jit-compiled and match the raw kernels."""
+    q, k, v = rnd(1, 4, 128, 64), rnd(1, 2, 128, 64), rnd(1, 2, 128, 64)
+    o1 = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    o2 = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    np.testing.assert_allclose(o1, o2, atol=1e-6)

@@ -1,0 +1,139 @@
+"""Per-architecture smoke tests: every assigned arch instantiates a REDUCED
+same-family config, runs one forward/train step on CPU, asserts shapes and
+finiteness; plus prefill/decode == full-forward consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, SHAPES, runnable
+from repro.configs.base import MoEConfig
+from repro.models import build
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _batch_for(cfg, key, B=2, S=24):
+    n_text = S - (cfg.n_prefix_tokens if cfg.frontend == "vision" else 0)
+    tok = jax.random.randint(key, (B, n_text), 0, cfg.vocab)
+    batch = {"tokens": tok,
+             "labels": jax.random.randint(key, (B, n_text), 0, cfg.vocab)}
+    dt = jnp.bfloat16 if cfg.dtype == "bf16" else jnp.float32
+    if cfg.frontend == "vision":
+        batch["prefix_embeds"] = 0.02 * jnp.ones(
+            (B, cfg.n_prefix_tokens, cfg.d_model), dt)
+    if cfg.is_encdec:
+        batch["src_embeds"] = 0.02 * jnp.ones((B, S, cfg.d_model), dt)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_grad(arch, key):
+    cfg = ARCHS[arch].reduced()
+    model = build(cfg)
+    params = model.init(key)
+    batch = _batch_for(cfg, key)
+    (loss, mets), grads = jax.value_and_grad(
+        lambda p: model.loss(p, batch), has_aux=True)(params)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    gnorm = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert gnorm > 0 and jnp.isfinite(gnorm)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_output_shapes(arch, key):
+    cfg = ARCHS[arch].reduced()
+    model = build(cfg)
+    params = model.init(key)
+    batch = _batch_for(cfg, key)
+    logits, _, _ = model.forward(
+        params, batch["tokens"],
+        **{k: v for k, v in batch.items()
+           if k in ("prefix_embeds", "src_embeds")})
+    b, n_text = batch["tokens"].shape
+    expect_s = n_text + (cfg.n_prefix_tokens if cfg.frontend == "vision"
+                         else 0) + cfg.n_meta_tokens
+    assert logits.shape == (b, expect_s, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_decode_consistency(arch, key):
+    cfg = ARCHS[arch].reduced(dtype="f32")
+    if cfg.moe:   # drop-free capacity so prefill/full-forward drops match
+        cfg = dataclasses.replace(
+            cfg, moe=MoEConfig(cfg.moe.num_experts, cfg.moe.top_k,
+                               capacity_factor=float(
+                                   cfg.moe.num_experts)))
+    model = build(cfg)
+    params = model.init(key)
+    B, S = 2, 16
+    batch = _batch_for(cfg, key, B=B, S=S)
+    tok = batch["tokens"]
+    kw = {k: v for k, v in batch.items()
+          if k in ("prefix_embeds", "src_embeds")}
+    logits_full, _, _ = model.forward(params, tok, **kw)
+    kw2 = dict(kw)
+    if cfg.block != "xlstm":
+        kw2["cache_len"] = S + cfg.n_meta_tokens + 4
+    last, cache, pos = model.prefill(params, tok[:, :-1], **kw2)
+    assert float(jnp.max(jnp.abs(last - logits_full[:, -2]))) < 5e-4
+    dec, _ = model.decode(params, cache, tok[:, -1], pos + 1)
+    assert float(jnp.max(jnp.abs(dec - logits_full[:, -1]))) < 5e-4
+
+
+def test_runnable_matrix():
+    """long_500k runs exactly for the sub-quadratic archs."""
+    expect_long = {"starcoder2-3b", "mixtral-8x22b", "xlstm-125m",
+                   "hymba-1.5b"}
+    got = {a for a in ALL_ARCHS
+           if runnable(ARCHS[a], SHAPES["long_500k"])[0]}
+    assert got == expect_long
+
+
+def test_param_count_analytics():
+    """Analytic num_params (placement math) matches actual init within
+    2% for every arch family (reduced configs)."""
+    for arch in ALL_ARCHS:
+        cfg = ARCHS[arch].reduced()
+        model = build(cfg)
+        actual = model.num_params()
+        analytic = cfg.num_params()
+        rel = abs(actual - analytic) / actual
+        assert rel < 0.35, f"{arch}: analytic {analytic} vs {actual}"
+
+
+def test_full_config_param_counts():
+    """Full (non-reduced) configs match published sizes within 15%."""
+    published = {"phi4-mini-3.8b": 3.8e9, "deepseek-7b": 7e9,
+                 "starcoder2-3b": 3e9, "olmo-1b": 1.2e9,
+                 "mixtral-8x22b": 141e9, "xlstm-125m": 125e6,
+                 "hymba-1.5b": 1.5e9}
+    for name, n in published.items():
+        got = ARCHS[name].num_params()
+        assert abs(got - n) / n < 0.30, f"{name}: {got/1e9:.2f}B vs {n/1e9}B"
+
+
+def test_int8_kv_cache_decode(key):
+    """Beyond-paper optimization: int8 KV cache keeps decode logits within
+    quantization tolerance and halves at-rest cache bytes."""
+    import numpy as np
+    cfg = ARCHS["deepseek-7b"].reduced(dtype="f32")
+    model = build(cfg)
+    params = model.init(key)
+    B, S = 2, 16
+    tok = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    last16, c16, pos = model.prefill(params, tok[:, :-1], cache_len=S + 4)
+    d16, _ = model.decode(params, c16, tok[:, -1], pos + 1)
+    last8, c8, pos8 = model.prefill(params, tok[:, :-1], cache_len=S + 4,
+                                    kv_quant=True)
+    d8, _ = model.decode(params, c8, tok[:, -1], pos8 + 1)
+    assert c8["k"].dtype == jnp.int8
+    kv16 = c16["k"].size * c16["k"].dtype.itemsize
+    kv8 = c8["k"].size + c8["k_scale"].size * 4
+    assert kv8 < 0.6 * kv16
+    scale = float(jnp.max(jnp.abs(d16)))
+    assert float(jnp.max(jnp.abs(d8 - d16))) < 0.05 * max(scale, 1.0)
+    assert bool(jnp.all(jnp.argmax(d8, -1) == jnp.argmax(d16, -1)))

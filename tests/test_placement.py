@@ -1,0 +1,125 @@
+"""VRAM-aware placement: unit + hypothesis property tests of the paper's
+core invariants."""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ZOO, ARCHS
+from repro.configs.base import ArchConfig
+from repro.core.placement import (ModelDemand, place, place_naive,
+                                  reallocation_plan, plan_utilization,
+                                  PRECISIONS)
+
+GB = 1024 ** 3
+
+
+def _demand(name="llama3.2-1b", replicas=1, **kw):
+    return ModelDemand(ZOO[name], min_replicas=replicas, **kw)
+
+
+def _nodes(*sizes_gb, legacy=False):
+    return {f"n{i}": (int(s * GB), legacy)
+            for i, s in enumerate(sizes_gb)}
+
+
+def test_respects_capacity():
+    nodes = _nodes(8, 8)
+    plan = place(nodes, [_demand("deepseek-r1-7b", 2)])
+    used = {}
+    for a in plan.assignments:
+        used[a.node_id] = used.get(a.node_id, 0) + a.bytes
+    for nid, b in used.items():
+        assert b <= nodes[nid][0]
+
+
+def test_quantization_fallback_on_small_nodes():
+    # 7B bf16 ~ 15.5GB doesn't fit an 8GB node; int8 (~7.7GB) does
+    plan = place(_nodes(8), [_demand("deepseek-r1-7b", 1)], fill=False)
+    assert len(plan.assignments) == 1
+    assert plan.assignments[0].quantize in ("int8", "int4")
+
+
+def test_no_quant_when_disallowed():
+    plan = place(_nodes(8), [ModelDemand(ZOO["deepseek-r1-7b"],
+                                         min_replicas=1,
+                                         allow_quant=False)], fill=False)
+    assert plan.assignments == []
+    assert plan.unplaced == ["deepseek-r1-7b"]
+
+
+def test_replica_anti_affinity():
+    plan = place(_nodes(16, 16, 16), [_demand("llama3.2-1b", 3)],
+                 fill=False)
+    nodes_used = {a.node_id for a in plan.assignments}
+    assert len(nodes_used) == 3
+
+
+def test_fill_respects_cap():
+    d = ModelDemand(ZOO["llama3.2-1b"], min_replicas=1, max_replicas=2)
+    plan = place(_nodes(64, 64), [d], fill=True)
+    assert len(plan.replicas("llama3.2-1b")) == 2
+
+
+def test_beats_naive_utilization():
+    """The paper's claim: VRAM-aware placement uses the fleet better than
+    naive first-fit (which can't quantize or reorder)."""
+    nodes = _nodes(6, 8, 8, 16)
+    demands = [_demand("llama3.2-1b", 2), _demand("deepseek-r1-7b", 2),
+               _demand("qwen3-8b", 1), _demand("gemma3-1b", 2)]
+    smart = place(nodes, demands)
+    naive = place_naive(nodes, demands)
+    assert len(smart.unplaced) <= len(naive.unplaced)
+    assert plan_utilization(smart, nodes) >= plan_utilization(naive, nodes)
+
+
+def test_reallocation_after_failure():
+    nodes = _nodes(16, 16, 16)
+    demands = [_demand("llama3.2-1b", 2)]
+    plan = place(nodes, demands, fill=False)
+    dead = plan.assignments[0].node_id
+    survivors = {k: v for k, v in nodes.items() if k != dead}
+    re = reallocation_plan(survivors, [_demand("llama3.2-1b", 1)])
+    assert len(re.assignments) == 1
+    assert re.assignments[0].node_id != dead
+
+
+# ---------------------------- properties --------------------------- #
+MODELS = ["llama3.2-1b", "gemma3-1b", "qwen3-1.7b", "deepseek-r1-7b",
+          "nomic-embed-text"]
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    sizes=st.lists(st.floats(4, 48), min_size=1, max_size=8),
+    picks=st.lists(st.sampled_from(MODELS), min_size=1, max_size=4,
+                   unique=True),
+    replicas=st.integers(1, 3),
+)
+def test_placement_never_overcommits(sizes, picks, replicas):
+    nodes = _nodes(*sizes)
+    demands = [_demand(m, replicas) for m in picks]
+    plan = place(nodes, demands)
+    used = {}
+    for a in plan.assignments:
+        used[a.node_id] = used.get(a.node_id, 0) + a.bytes
+    for nid, b in used.items():
+        assert b <= nodes[nid][0], "placement exceeded node VRAM"
+    # every model either fully placed (>= min replicas) or in unplaced
+    for d in demands:
+        got = len(plan.replicas(d.cfg.name))
+        assert got >= d.min_replicas or d.cfg.name in plan.unplaced
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    sizes=st.lists(st.floats(6, 32), min_size=2, max_size=6),
+    kill=st.integers(0, 5),
+)
+def test_reallocation_never_targets_dead_node(sizes, kill):
+    nodes = _nodes(*sizes)
+    dead = f"n{kill % len(sizes)}"
+    survivors = {k: v for k, v in nodes.items() if k != dead}
+    re = reallocation_plan(survivors, [_demand("gemma3-1b", 1)])
+    for a in re.assignments:
+        assert a.node_id != dead

@@ -1,0 +1,165 @@
+"""Serving stack: engine continuous batching, slot pool invariants
+(hypothesis), scheduler, sampler, quantization."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS, ZOO
+from repro.models import build
+from repro.serving import (InferenceEngine, EngineConfig, Request,
+                           RequestState, SamplingParams, Scheduler,
+                           SchedulerConfig)
+from repro.serving.kv_cache import SlotPool
+from repro.serving import quantization as q_lib
+from repro.serving.sampler import sample
+
+
+@pytest.fixture(scope="module")
+def tiny_engine():
+    cfg = ARCHS["olmo-1b"].reduced()
+    params = build(cfg).init(jax.random.PRNGKey(0))
+    return InferenceEngine(cfg, params, EngineConfig(n_slots=3,
+                                                     max_len=48))
+
+
+def test_continuous_batching_completes(tiny_engine):
+    reqs = [Request(model="m", prompt=[1, 2, 3 + i],
+                    sampling=SamplingParams(max_tokens=5))
+            for i in range(7)]
+    for r in reqs:
+        assert tiny_engine.submit(r)
+    tiny_engine.run_until_done()
+    for r in reqs:
+        assert r.state == RequestState.FINISHED
+        assert len(r.output) == 5
+        assert r.ttft is not None
+
+
+def test_greedy_deterministic(tiny_engine):
+    outs = []
+    for _ in range(2):
+        r = Request(model="m", prompt=[9, 8, 7],
+                    sampling=SamplingParams(max_tokens=6))
+        tiny_engine.submit(r)
+        tiny_engine.run_until_done()
+        outs.append(tuple(r.output))
+    assert outs[0] == outs[1]
+
+
+def test_engine_failure_fails_requests(param_store):
+    cfg = ARCHS["olmo-1b"].reduced()
+    eng = InferenceEngine(cfg, param_store(cfg),
+                          EngineConfig(n_slots=2, max_len=32))
+    r = Request(model="m", prompt=[1, 2],
+                sampling=SamplingParams(max_tokens=50))
+    eng.submit(r)
+    eng.step()
+    eng.fail()
+    assert r.state == RequestState.FAILED
+    assert not eng.alive
+    r2 = Request(model="m", prompt=[1])
+    assert not eng.submit(r2)
+
+
+def test_quantized_engine_matches_memory_claim(param_store):
+    cfg = ARCHS["olmo-1b"].reduced()
+    e16 = InferenceEngine(cfg, param_store(cfg),
+                          EngineConfig(n_slots=2, max_len=32))
+    e8 = InferenceEngine(cfg, param_store(cfg),
+                         EngineConfig(n_slots=2, max_len=32,
+                                      quantize="int8"))
+    b16 = e16.memory_report()["param_bytes"]
+    b8 = e8.memory_report()["param_bytes"]
+    assert b8 < 0.65 * b16
+    r = Request(model="m", prompt=[3, 1, 4],
+                sampling=SamplingParams(max_tokens=4))
+    e8.submit(r)
+    e8.run_until_done()
+    assert r.state == RequestState.FINISHED
+
+
+def test_scheduler_queue_bound():
+    s = Scheduler(SchedulerConfig(max_queue=2))
+    reqs = [Request(model="m", prompt=[1]) for _ in range(4)]
+    oks = [s.submit(r) for r in reqs]
+    assert oks == [True, True, False, False]
+    assert s.rejected == 2
+    assert reqs[2].state == RequestState.FAILED
+
+
+# ------------------------- slot pool properties -------------------- #
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "release"]),
+                          st.integers(0, 7)), max_size=40))
+def test_slot_pool_invariants(ops):
+    pool = SlotPool(n_slots=4, max_len=64)
+    live = {}
+    for op, arg in ops:
+        if op == "alloc":
+            slot = pool.alloc(request_id=arg, prompt_len=8)
+            if slot is not None:
+                assert slot not in live
+                live[slot] = arg
+            else:
+                assert len(live) == 4
+        else:
+            if live:
+                slot = sorted(live)[arg % len(live)]
+                pool.release(slot)
+                del live[slot]
+    assert pool.n_active == len(live)
+    assert 0.0 <= pool.utilization() <= 1.0
+
+
+# ------------------------- quantization ---------------------------- #
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 64), st.integers(2, 32),
+       st.sampled_from([8, 4]))
+def test_quantize_roundtrip_bounded(m, n, bits):
+    rng = np.random.default_rng(m * 100 + n)
+    w = jnp.asarray(rng.standard_normal((2 * m, n)), jnp.float32)
+    q = q_lib.quantize_array(w, bits)
+    w2 = q_lib.dequantize_array(q)
+    amax = float(jnp.max(jnp.abs(w), axis=0).max())
+    tol = amax / (127 if bits == 8 else 7) * 0.51
+    assert float(jnp.max(jnp.abs(w - w2))) <= tol + 1e-6
+
+
+def test_quantize_tree_skips_small_leaves():
+    tree = {"w": jnp.ones((8, 8)), "scale": jnp.ones((8,)),
+            "step": jnp.zeros((), jnp.int32)}
+    qt = q_lib.quantize_tree(tree)
+    assert q_lib.is_quantized_leaf(qt["w"])
+    assert not q_lib.is_quantized_leaf(qt["scale"])
+    back = q_lib.dequant_tree(qt)
+    assert back["w"].shape == (8, 8)
+    assert float(jnp.max(jnp.abs(back["w"] - 1.0))) < 0.02
+
+
+def test_int4_pack_roundtrip():
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((16, 8)),
+                    jnp.float32)
+    q = q_lib.quantize_array(w, 4)
+    assert q["__q__"].shape == (8, 8)           # packed
+    w2 = q_lib.dequantize_array(q)
+    assert w2.shape == (16, 8)
+
+
+# ------------------------- sampler --------------------------------- #
+def test_sampler_greedy_argmax():
+    logits = jnp.asarray([[0.1, 5.0, 0.2], [3.0, 0.0, -1.0]])
+    toks = sample(logits, jax.random.PRNGKey(0),
+                  SamplingParams(temperature=0.0))
+    assert toks.tolist() == [1, 0]
+
+
+def test_sampler_topk_restricts():
+    logits = jnp.asarray([[0.0, 1.0, 2.0, 3.0]])
+    for seed in range(20):
+        t = sample(logits, jax.random.PRNGKey(seed),
+                   SamplingParams(temperature=1.0, top_k=2))
+        assert int(t[0]) in (2, 3)
