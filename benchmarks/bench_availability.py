@@ -12,10 +12,11 @@ import time
 
 import jax
 
+from repro.api import Gateway
 from repro.cluster import paper_testbed
 from repro.configs import ZOO
-from repro.core import (Client, ControllerConfig, ModelCatalog,
-                        ModelDemand, SDAIController)
+from repro.core import (ControllerConfig, ModelCatalog, ModelDemand,
+                        SDAIController)
 from repro.models import build
 from repro.serving import SamplingParams
 
@@ -40,7 +41,7 @@ def run(n_requests: int = 120, kills: int = 2, seed: int = 0):
     ctrl.discover()
     ctrl.deploy([ModelDemand(ZOO[m], min_replicas=2) for m in models])
 
-    client = Client(ctrl)
+    gw = Gateway(ctrl)
     ok = fail = retries = 0
     realloc_us = []
     kill_at = {n_requests * (i + 1) // (kills + 1) for i in range(kills)}
@@ -52,14 +53,14 @@ def run(n_requests: int = 120, kills: int = 2, seed: int = 0):
                 t0 = time.perf_counter()
                 ctrl.tick()
                 realloc_us.append((time.perf_counter() - t0) * 1e6)
-        req = client.submit(rng.choice(models),
-                            [rng.randrange(64) for _ in range(4)],
-                            SamplingParams(max_tokens=4))
-        retries += req.retries
-        if req.error:
-            fail += 1
-        else:
+        resp = gw.generate(rng.choice(models),
+                           [rng.randrange(64) for _ in range(4)],
+                           SamplingParams(max_tokens=4))
+        retries += resp.retries
+        if resp.ok:
             ok += 1
+        else:
+            fail += 1
     rows = [
         ("availability_success_rate", 0.0, f"{ok/(ok+fail):.4f}"),
         ("availability_failovers", 0.0, str(retries)),

@@ -1,55 +1,56 @@
-"""Load-balancing fairness + straggler mitigation — the Service Frontend
-claims: leastconn spread (coefficient of variation across replicas) and
-traffic kept away from stragglers."""
+"""Load-balancing fairness + straggler mitigation through Gateway API v1 —
+the Service Frontend claims: leastconn spread (coefficient of variation
+across replicas) and traffic kept away from stragglers."""
 from __future__ import annotations
 
 import statistics
 
+from repro.api import Gateway
 from repro.cluster import Fleet, BackendNode
 from repro.configs import ZOO
-from repro.core.frontend import ServiceFrontend, FrontendConfig
-from repro.core.health import HealthMonitor, HealthConfig
-from repro.core.registry import ReplicaInfo, ReplicaKey, ReplicaRegistry
-from repro.serving.request import Request
-from repro.serving.sampler import SamplingParams
+from repro.core import (ModelCatalog, ReplicaInfo, ReplicaKey,
+                        SDAIController)
+from repro.serving import SamplingParams
+
+MODEL = "deepseek-r1-7b"
 
 
 def _stack(n=6):
     fleet = Fleet([BackendNode(f"n{i}", "v5e-1") for i in range(n)])
-    monitor = HealthMonitor(HealthConfig())
-    replicas = ReplicaRegistry()
-    cfg = ZOO["deepseek-r1-7b"]
+    cfg = ZOO[MODEL]
+    catalog = ModelCatalog()
+    catalog.register(cfg)
+    ctrl = SDAIController(fleet, catalog)
+    ctrl.discover()
     for node in fleet.nodes.values():
         inst = node.deploy(cfg, quantize="int8", real=False)
-        replicas.add(ReplicaInfo(ReplicaKey(node.node_id,
-                                            inst.instance_id),
-                                 cfg.name, "int8", 4, 2048, inst.bytes))
-        monitor.observe_heartbeat(node.node_id)
-    return fleet, monitor, replicas, \
-        ServiceFrontend(fleet, replicas, monitor, FrontendConfig())
+        ctrl.replicas.add(ReplicaInfo(
+            ReplicaKey(node.node_id, inst.instance_id),
+            cfg.name, "int8", 4, 2048, inst.bytes))
+    return ctrl, Gateway(ctrl)
 
 
 def run(n_requests: int = 300):
     rows = []
-    fleet, mon, reps, fe = _stack(6)
+    ctrl, gw = _stack(6)
     for _ in range(n_requests):
-        fe.submit(Request(model="deepseek-r1-7b", prompt=[1],
-                          sampling=SamplingParams(max_tokens=1)))
-    counts = list(fe.stats.per_replica.values())
+        resp = gw.generate(MODEL, [1], SamplingParams(max_tokens=1))
+        assert resp.ok, resp.error
+    counts = list(ctrl.frontend.stats.per_replica.values())
     cv = statistics.pstdev(counts) / statistics.mean(counts)
     rows.append(("lb_fairness_cv", 0.0, f"{cv:.4f}"))
 
     # straggler scenario: one replica 100x slower
-    fleet, mon, reps, fe = _stack(6)
-    keys = [str(r.key) for r in reps.for_model("deepseek-r1-7b")]
+    ctrl, gw = _stack(6)
+    keys = [str(r.key) for r in ctrl.replicas.for_model(MODEL)]
     for _ in range(20):
-        mon.observe_latency(keys[0], 1.0)
+        ctrl.monitor.observe_latency(keys[0], 1.0)
         for k in keys[1:]:
-            mon.observe_latency(k, 0.01)
+            ctrl.monitor.observe_latency(k, 0.01)
     for _ in range(n_requests):
-        fe.submit(Request(model="deepseek-r1-7b", prompt=[1],
-                          sampling=SamplingParams(max_tokens=1)))
-    slow_share = fe.stats.per_replica.get(keys[0], 0) / n_requests
+        gw.generate(MODEL, [1], SamplingParams(max_tokens=1))
+    slow_share = ctrl.frontend.stats.per_replica.get(keys[0], 0) \
+        / n_requests
     rows.append(("lb_straggler_traffic_share", 0.0,
                  f"{slow_share:.4f}"))
     return rows

@@ -1,51 +1,80 @@
-"""Live serving engine throughput/latency on CPU (tiny model): continuous
-batching decode tokens/s, TTFT, and the quantized-engine memory ratio."""
+"""Live serving throughput/latency on CPU (tiny model) through Gateway API
+v1: batched decode tokens/s, TTFT from frozen responses, streaming-path
+overhead, and the quantized-engine memory ratio."""
 from __future__ import annotations
 
 import time
 
 import jax
 
+from repro.api import Gateway, GenerationRequest
+from repro.cluster import BackendNode, Fleet
 from repro.configs import ARCHS
+from repro.core import (ModelCatalog, ReplicaInfo, ReplicaKey,
+                        SDAIController)
 from repro.models import build
-from repro.serving import (EngineConfig, InferenceEngine, Request,
-                           SamplingParams)
+from repro.serving import SamplingParams
 
 _cache = {}
 
 
-def _engine(quantize=""):
-    cfg = ARCHS["olmo-1b"].reduced()
+def _store(cfg):
     if "p" not in _cache:
         _cache["p"] = build(cfg).init(jax.random.PRNGKey(0))
-    return cfg, InferenceEngine(cfg, _cache["p"],
-                                EngineConfig(n_slots=4, max_len=64,
-                                             quantize=quantize))
+    return _cache["p"]
+
+
+def _stack(quantize=""):
+    """One-node fleet serving one (optionally quantized) live engine,
+    fronted by the unified gateway."""
+    cfg = ARCHS["olmo-1b"].reduced()
+    fleet = Fleet([BackendNode("n0", "v5e-1", param_store=_store)])
+    catalog = ModelCatalog()
+    catalog.register(cfg)
+    ctrl = SDAIController(fleet, catalog)
+    ctrl.discover()
+    node = fleet.nodes["n0"]
+    inst = node.deploy(cfg, quantize=quantize, n_slots=4, max_len=64)
+    ctrl.replicas.add(ReplicaInfo(ReplicaKey("n0", inst.instance_id),
+                                  cfg.name, quantize, 4, 64, inst.bytes))
+    return cfg, inst, Gateway(ctrl)
 
 
 def run(n_requests: int = 12, max_tokens: int = 24):
     rows = []
     for quant in ("", "int8"):
-        cfg, eng = _engine(quant)
-        reqs = [Request(model=cfg.name, prompt=[1, 2, 3, i],
-                        sampling=SamplingParams(max_tokens=max_tokens))
+        cfg, inst, gw = _stack(quant)
+        # warm-up/compile
+        gw.generate(cfg.name, [1, 2, 3],
+                    SamplingParams(max_tokens=2))
+        reqs = [GenerationRequest(model=cfg.name, prompt=(1, 2, 3, i),
+                                  sampling=SamplingParams(
+                                      max_tokens=max_tokens))
                 for i in range(n_requests)]
-        for r in reqs:
-            eng.submit(r)
-        eng.step()                     # warm-up/compile step
         t0 = time.perf_counter()
-        eng.run_until_done()
+        resps = gw.generate_batch(reqs)
         dt = time.perf_counter() - t0
-        toks = sum(len(r.output) for r in reqs)
-        ttfts = [r.ttft for r in reqs if r.ttft]
+        assert all(r.ok for r in resps), [r.error for r in resps if not r.ok]
+        toks = sum(len(r.tokens) for r in resps)
+        ttfts = [r.ttft for r in resps if r.ttft]
         tag = quant or "bf16"
         rows.append((f"serving_decode_{tag}", dt / toks * 1e6,
                      f"tok_per_s={toks/dt:.1f}"))
         rows.append((f"serving_ttft_{tag}",
                      sum(ttfts) / len(ttfts) * 1e6,
                      f"n={len(ttfts)}"))
-        mem = eng.memory_report()
+        mem = inst.engine.memory_report()
         rows.append((f"serving_mem_{tag}", 0.0,
                      f"params={mem['param_bytes']};"
                      f"cache={mem['cache_bytes']}"))
+        if not quant:
+            # streaming path: per-event overhead vs blocking batch
+            t0 = time.perf_counter()
+            n_events = sum(
+                1 for _ in gw.stream(cfg.name, [1, 2, 3],
+                                     SamplingParams(
+                                         max_tokens=max_tokens)))
+            dt = time.perf_counter() - t0
+            rows.append(("serving_stream_event", dt / n_events * 1e6,
+                         f"events={n_events}"))
     return rows

@@ -1,8 +1,9 @@
-"""Quickstart: AIvailable in ~40 lines.
+"""Quickstart: AIvailable in ~40 lines, on Gateway API v1.
 
 Build the paper's heterogeneous 6-node testbed, deploy two models through
 the SDAI controller (VRAM-aware placement + HAProxy-style frontend), and
-talk to everything through ONE unified client endpoint.
+talk to everything through ONE unified gateway: sync `generate`, async
+`submit` + token streaming, and the typed admin snapshot.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,10 +11,11 @@ import dataclasses
 
 import jax
 
+from repro.api import Gateway
 from repro.cluster import paper_testbed
 from repro.configs import ZOO
-from repro.core import (Client, ControllerConfig, ModelCatalog,
-                        ModelDemand, SDAIController)
+from repro.core import (ControllerConfig, ModelCatalog, ModelDemand,
+                        SDAIController)
 from repro.models import build
 from repro.serving import SamplingParams
 
@@ -48,17 +50,29 @@ def main():
     print(f"deployed {len(plan.assignments)} instances, "
           f"fleet VRAM utilization {ctrl.fleet_utilization():.1%}")
 
-    client = Client(ctrl)
-    print("models behind the unified endpoint:", client.models())
-    for model in client.models():
-        req = client.generate(model, prompt=[1, 2, 3, 4],
-                              sampling=SamplingParams(max_tokens=8))
-        print(f"  {model:14s} -> {req.output}  (via {req.node}, "
-              f"ttft={req.ttft*1e3:.0f}ms)")
+    gw = Gateway(ctrl)
+    print("models behind the unified endpoint:", gw.models())
 
-    dash = ctrl.dashboard()
-    print(f"dashboard: {dash['connected']}/{dash['total']} agents, "
-          f"routing={ {m: len(r) for m, r in dash['routing'].items()} }")
+    # sync: one blocking call -> frozen GenerationResponse
+    resp = gw.generate("llama3.2-1b", prompt=[1, 2, 3, 4],
+                       sampling=SamplingParams(max_tokens=8))
+    print(f"  sync   {resp.model:14s} -> {list(resp.tokens)}  "
+          f"(via {resp.node}, ttft={resp.ttft*1e3:.0f}ms, "
+          f"finish={resp.finish_reason})")
+
+    # async + streaming: tokens arrive as engine decode steps produce them
+    handle = gw.submit("gemma3-1b", prompt=[5, 6, 7],
+                       sampling=SamplingParams(max_tokens=8))
+    toks = []
+    for ev in handle.stream():
+        if ev.type.value == "token":
+            toks.append(ev.token)           # incremental delta
+    print(f"  stream {handle.response.model:14s} -> {toks}  "
+          f"(via {handle.response.node})")
+
+    snap = gw.admin.snapshot()
+    print(f"admin snapshot: {snap.connected}/{snap.total} agents, "
+          f"routing={ {m: len(r) for m, r in snap.routing.items()} }")
 
 
 if __name__ == "__main__":

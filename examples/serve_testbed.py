@@ -17,10 +17,11 @@ import random
 
 import jax
 
+from repro.api import Gateway
 from repro.cluster import paper_testbed
 from repro.configs import ZOO
-from repro.core import (Client, ControllerConfig, ModelCatalog,
-                        ModelDemand, SDAIController)
+from repro.core import (ControllerConfig, ModelCatalog, ModelDemand,
+                        SDAIController)
 from repro.models import build
 from repro.serving import SamplingParams
 
@@ -65,8 +66,8 @@ def main():
           f"(util {ctrl.fleet_utilization():.1%}); quantized: "
           f"{sum(1 for a in plan.assignments if a.quantize)}")
 
-    client = Client(ctrl)
-    models = client.models()
+    gw = Gateway(ctrl)
+    models = gw.models()
     ok = fail = 0
     failed_at = recovered_at = None
     victim = None
@@ -87,12 +88,12 @@ def main():
             recovered_at = i
             print(f"[{i}] node {victim} RECOVERED -> re-filled")
         model = rng.choice(models)
-        req = client.generate(model, [rng.randrange(64) for _ in range(4)],
-                              SamplingParams(max_tokens=4))
-        if req.error:
-            fail += 1
-        else:
+        resp = gw.generate(model, [rng.randrange(64) for _ in range(4)],
+                           SamplingParams(max_tokens=4))
+        if resp.ok:
             ok += 1
+        else:
+            fail += 1
     print(f"\navailability: {ok}/{ok+fail} = {ok/(ok+fail):.1%} "
           f"(node died at req {failed_at}, recovered at {recovered_at})")
     print("frontend stats:", ctrl.frontend.stats)

@@ -1,0 +1,24 @@
+"""Gateway API v1 — the system's single public surface.
+
+    from repro.api import Gateway
+    gw = Gateway(controller)
+    resp = gw.generate("llama3.2-1b", [1, 2, 3])          # sync
+    handle = gw.submit("llama3.2-1b", [1, 2, 3])          # async
+    for ev in handle.stream(): ...                        # streaming
+    snap = gw.admin.snapshot()                            # typed admin
+"""
+from repro.api.admin import (AdminAPI, DeployResult, FleetSnapshot,
+                             InstanceSnapshot, ModelSnapshot, NodeSnapshot)
+from repro.api.gateway import (Gateway, GatewayConfig, GatewayStats,
+                               GenerationHandle)
+from repro.api.types import (API_VERSION, APIError, ErrorCode, GatewayError,
+                             GenerationRequest, GenerationResponse,
+                             StreamEvent, StreamEventType,
+                             response_from_internal)
+
+__all__ = ["API_VERSION", "APIError", "AdminAPI", "DeployResult",
+           "ErrorCode", "FleetSnapshot", "Gateway", "GatewayConfig",
+           "GatewayError", "GatewayStats", "GenerationHandle",
+           "GenerationRequest", "GenerationResponse", "InstanceSnapshot",
+           "ModelSnapshot", "NodeSnapshot", "StreamEvent",
+           "StreamEventType", "response_from_internal"]

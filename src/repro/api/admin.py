@@ -1,0 +1,208 @@
+"""Gateway API v1 — typed admin surface (the SDAI dashboard, typed).
+
+`AdminAPI` is the control plane the old `SDAIController.dashboard()` dict
+grows into: frozen `FleetSnapshot`/`NodeSnapshot`/`InstanceSnapshot` views
+plus deploy / undeploy / scale / drain verbs.  `dashboard()` remains as a
+thin shim that renders `snapshot().to_dict()` in the legacy shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
+
+from repro.core.placement import ModelDemand
+
+if TYPE_CHECKING:                      # avoid import cycle at runtime
+    from repro.api.gateway import Gateway
+    from repro.core.controller import SDAIController
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceSnapshot:
+    instance_id: int
+    model: str
+    quantize: str
+    n_slots: int
+    max_len: int
+    bytes: int
+    load: float
+    alive: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeSnapshot:
+    node_id: str
+    klass: str
+    alive: bool
+    health: str
+    hbm_used: int
+    hbm_budget: int
+    instances: Tuple[InstanceSnapshot, ...]
+
+    @property
+    def utilization(self) -> float:
+        return self.hbm_used / self.hbm_budget if self.hbm_budget else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSnapshot:
+    name: str
+    replicas: int
+    healthy_replicas: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSnapshot:
+    connected: int
+    total: int
+    nodes: Tuple[NodeSnapshot, ...]
+    models: Tuple[ModelSnapshot, ...]
+    routing: Dict[str, Tuple[str, ...]]
+    utilization: float
+    last_update: float
+
+    def node(self, node_id: str) -> Optional[NodeSnapshot]:
+        for n in self.nodes:
+            if n.node_id == node_id:
+                return n
+        return None
+
+    def to_dict(self) -> Dict:
+        """Legacy `dashboard()` shape (paper Fig. 3)."""
+        return {
+            "connected": self.connected,
+            "total": self.total,
+            "agents": {
+                n.node_id: {
+                    "class": n.klass,
+                    "alive": n.alive,
+                    "health": n.health,
+                    "hbm_used": n.hbm_used,
+                    "hbm_budget": n.hbm_budget,
+                    "instances": [{"model": i.model,
+                                   "quantize": i.quantize}
+                                  for i in n.instances],
+                } for n in self.nodes},
+            "models": {m.name: m.replicas for m in self.models},
+            "routing": {m: list(r) for m, r in self.routing.items()},
+            "last_update": self.last_update,
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class DeployResult:
+    placed: int
+    unplaced: Tuple[str, ...]
+
+    @property
+    def ok(self) -> bool:
+        return not self.unplaced
+
+
+class AdminAPI:
+    """Typed control plane over the SDAI controller.  Standalone
+    (`AdminAPI(ctrl)`) for observation; attach a `Gateway` (done
+    automatically by `Gateway.__init__`) to enable `drain_model`."""
+
+    def __init__(self, controller: "SDAIController",
+                 gateway: Optional["Gateway"] = None):
+        self.c = controller
+        self.gateway = gateway
+
+    # ---- observe ------------------------------------------------- #
+    def snapshot(self) -> FleetSnapshot:
+        c = self.c
+        nodes: List[NodeSnapshot] = []
+        for nid in c.nodes.ids():
+            node = c.fleet.nodes.get(nid)
+            alive = c.node_alive(nid)
+            instances = []
+            if alive:
+                for r in c.replicas.on_node(nid):
+                    inst = node.instances.get(r.key.instance_id)
+                    instances.append(InstanceSnapshot(
+                        instance_id=r.key.instance_id,
+                        model=r.model_name, quantize=r.quantize,
+                        n_slots=r.n_slots, max_len=r.max_len,
+                        bytes=r.bytes,
+                        load=inst.load if inst is not None else 0.0,
+                        alive=inst.alive if inst is not None else False))
+            nodes.append(NodeSnapshot(
+                node_id=nid,
+                klass=node.klass.name if node else "?",
+                alive=alive,
+                health=c.monitor.status(nid).value,
+                hbm_used=node.hbm_used if node and alive else 0,
+                hbm_budget=node.hbm_budget if node else 0,
+                instances=tuple(instances)))
+        models = tuple(ModelSnapshot(
+            name=m, replicas=len(c.replicas.for_model(m)),
+            healthy_replicas=len(c.frontend.healthy_replicas(m)))
+            for m in c.replicas.models())
+        routing = {m: tuple(str(k) for k in c.frontend.healthy_replicas(m))
+                   for m in c.replicas.models()}
+        return FleetSnapshot(
+            connected=sum(1 for n in nodes if n.alive),
+            total=len(nodes), nodes=tuple(nodes), models=models,
+            routing=routing, utilization=c.fleet_utilization(),
+            last_update=c.clock())
+
+    # ---- mutate -------------------------------------------------- #
+    def deploy_model(self, demand: ModelDemand) -> DeployResult:
+        plan = self.c.deploy([demand])
+        return DeployResult(placed=len(plan.assignments),
+                            unplaced=tuple(plan.unplaced))
+
+    def undeploy_model(self, model: str) -> int:
+        if self.gateway is not None:
+            self.gateway._draining.discard(model)
+        return self.c.undeploy_model(model)
+
+    def scale_model(self, model: str, min_replicas: int) -> DeployResult:
+        """Grow (place additional replicas) or shrink (undeploy surplus)
+        the replica count for an already-registered demand."""
+        demand = self.c.demands.get(model)
+        if demand is None:
+            demand = ModelDemand(self.c.catalog.get(model),
+                                 min_replicas=min_replicas)
+        new_max = demand.max_replicas and max(demand.max_replicas,
+                                              min_replicas)
+        target = dataclasses.replace(demand, min_replicas=min_replicas,
+                                     max_replicas=new_max)
+        have = len(self.c.frontend.healthy_replicas(model))
+        if min_replicas > have:
+            delta = dataclasses.replace(target,
+                                        min_replicas=min_replicas - have,
+                                        max_replicas=min_replicas - have)
+            plan = self.c.deploy([delta])
+            # deploy() overwrote the demand with the delta; restore target
+            self.c.demands[model] = target
+            return DeployResult(placed=len(plan.assignments),
+                                unplaced=tuple(plan.unplaced))
+        self.c.demands[model] = target
+        removed = self.c.remove_replicas(model, keep=min_replicas)
+        self.c.bus.emit("model_scaled", model=model,
+                        target=min_replicas, removed=removed)
+        return DeployResult(placed=0, unplaced=())
+
+    def drain_model(self, model: str, max_pump_steps: int = 10_000) -> int:
+        """Stop admitting new requests for `model` (structured `DRAINING`
+        rejections) and pump the fleet until in-flight traffic settles.
+        Returns the number of requests still in flight (0 == drained).
+        The model stays drained until `resume_model` or
+        `undeploy_model`."""
+        if self.gateway is None:
+            raise RuntimeError("drain_model needs a Gateway-attached "
+                               "AdminAPI (use gateway.admin)")
+        self.gateway._draining.add(model)
+        steps = 0
+        while self.gateway.inflight(model) > 0 and steps < max_pump_steps:
+            self.c.fleet.pump()
+            steps += 1
+        self.c.bus.emit("model_drained", model=model,
+                        remaining=self.gateway.inflight(model))
+        return self.gateway.inflight(model)
+
+    def resume_model(self, model: str):
+        if self.gateway is not None:
+            self.gateway._draining.discard(model)

@@ -1,0 +1,330 @@
+"""Gateway API v1 — the unified serving facade.
+
+One `Gateway` fronts the whole fleet (the paper's "single logical unit"):
+
+* `generate()`        — blocking call, returns a frozen `GenerationResponse`
+* `submit()`          — returns a `GenerationHandle` (async future) with
+                        `.result()`, `.cancel()` and `.stream()` (a true
+                        incremental token iterator driven by per-token
+                        engine callbacks, surviving failover retries)
+* `generate_batch()`  — submit many, pump the fleet once for all of them
+* admission control   — per-model in-flight and backend queue-depth caps
+                        return structured 429-style `OVERLOADED` rejections
+                        instead of silently queuing
+* `.admin`            — the typed control plane (`repro.api.admin.AdminAPI`)
+
+The simulated fleet is hand-pumped: handles advance engines lazily via
+`Gateway._pump()` whenever a caller blocks on `result()`/`stream()`, so
+tokens surface exactly as engine decode steps produce them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, Iterator, List, Optional, Sequence, Union
+
+from repro.api.admin import AdminAPI
+from repro.api.types import (APIError, ErrorCode, GenerationRequest,
+                             GenerationResponse, StreamEvent,
+                             StreamEventType, response_from_internal)
+from repro.core.controller import SDAIController
+from repro.serving.request import (CODE_CANCELLED, CODE_ENGINE_FAILED,
+                                   CODE_TIMEOUT, Request)
+from repro.serving.sampler import SamplingParams
+
+
+@dataclasses.dataclass
+class GatewayConfig:
+    # admission control (None => unlimited, the seed behaviour)
+    max_inflight_per_model: Optional[int] = None
+    max_queue_depth_per_model: Optional[int] = None
+    # liveness: pump budget before a blocking wait times out
+    max_pump_steps: int = 10_000
+    # transparent re-route of a streaming request whose backend died
+    # before emitting any token (after first token the failure surfaces
+    # as a structured ERROR event instead — we never re-emit tokens)
+    max_stream_retries: int = 2
+
+
+@dataclasses.dataclass
+class GatewayStats:
+    submitted: int = 0
+    completed: int = 0
+    rejected_overloaded: int = 0
+    rejected_draining: int = 0
+    cancelled: int = 0
+    stream_retries: int = 0
+    timeouts: int = 0
+
+
+class GenerationHandle:
+    """Future for one in-flight generation.  Created by `Gateway.submit`;
+    never constructed directly."""
+
+    def __init__(self, gateway: "Gateway", request: GenerationRequest):
+        self._gw = gateway
+        self.request = request
+        self.internal: Optional[Request] = None   # current routing attempt
+        self._events: Deque[StreamEvent] = deque()
+        self._emitted = 0          # tokens delivered to this handle
+        self._retries_left = gateway.cfg.max_stream_retries
+        self._admitted = False
+        self._done = False
+        self._response: Optional[GenerationResponse] = None
+
+    # ------------------------------------------------------------- #
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    @property
+    def response(self) -> Optional[GenerationResponse]:
+        return self._response
+
+    # ---- wiring: callbacks installed on the internal request ------ #
+    def _on_token(self, req: Request, tok: int):
+        if req is not self.internal or self._done:
+            return
+        self._events.append(StreamEvent(StreamEventType.TOKEN, token=tok,
+                                        index=self._emitted))
+        self._emitted += 1
+
+    def _on_finish(self, req: Request):
+        if req is not self.internal or self._done:
+            return
+        if (req.error_code == CODE_ENGINE_FAILED and not req.cancelled
+                and self._emitted == 0 and self._retries_left > 0):
+            # backend died before the stream produced anything: re-route
+            # transparently on a fresh internal request
+            self._retries_left -= 1
+            self._gw.stats.stream_retries += 1
+            retry = self._gw._make_internal(self.request, self)
+            retry.retries = req.retries + 1
+            self.internal = retry
+            if self._gw.c.frontend.submit(retry):
+                return          # re-routed; stream continues seamlessly
+            if not retry._finish_fired and retry.finished_at is None:
+                # defensive: frontend always finishes on failure
+                retry.finish(error=req.error, code=req.error_code)
+            return              # retry's own on_finish finalized us
+        self._finalize(req)
+
+    def _finalize(self, req: Request):
+        self._done = True
+        self._response = resp = response_from_internal(req)
+        if self._admitted:
+            self._gw._release(self.request.model)
+            self._admitted = False
+            self._gw.stats.completed += 1   # settled admitted requests
+                                            # only, not rejections
+        if resp.error is not None:
+            self._events.append(StreamEvent(StreamEventType.ERROR,
+                                            response=resp,
+                                            error=resp.error))
+        else:
+            self._events.append(StreamEvent(StreamEventType.FINISH,
+                                            response=resp))
+
+    def _reject(self, error: APIError):
+        """Admission rejection: finish immediately, never routed."""
+        req = self.internal
+        req.finish(error=error.message, code=error.code.value)
+
+    # ------------------------------------------------------------- #
+    def stream(self) -> Iterator[StreamEvent]:
+        """Yield `StreamEvent`s incrementally, pumping the fleet between
+        deltas.  Always ends with exactly one terminal FINISH/ERROR."""
+        pumps = 0
+        while True:
+            while self._events:
+                ev = self._events.popleft()
+                yield ev
+                if ev.terminal:
+                    return
+            if self._done:
+                return
+            if pumps >= self._gw.cfg.max_pump_steps:
+                self._timeout()
+                continue
+            self._gw._pump()
+            pumps += 1
+
+    def result(self) -> GenerationResponse:
+        """Block (pump the fleet) until this request completes."""
+        pumps = 0
+        while not self._done:
+            if pumps >= self._gw.cfg.max_pump_steps:
+                self._timeout()
+                break
+            self._gw._pump()
+            pumps += 1
+        return self._response
+
+    def cancel(self) -> bool:
+        """Abort the request, freeing its engine slot.  Returns False if
+        already finished."""
+        if self._done:
+            return False
+        req = self.internal
+        if req.node and req.replica:
+            node = self._gw.c.fleet.nodes.get(req.node)
+            if node is not None:
+                node.cancel(int(req.replica), req.request_id)
+        req.cancelled = True
+        self._gw.stats.cancelled += 1
+        if req.finished_at is None:
+            req.finish(error="cancelled by client", code=CODE_CANCELLED)
+        else:                       # finished while suppressed? finalize
+            self._finalize(req)
+        return True
+
+    def _timeout(self):
+        req = self.internal
+        self._gw.stats.timeouts += 1
+        if req.node and req.replica:
+            node = self._gw.c.fleet.nodes.get(req.node)
+            if node is not None:
+                node.cancel(int(req.replica), req.request_id)
+        if req.finished_at is None:
+            req.finish(error="pump budget exhausted", code=CODE_TIMEOUT)
+        elif not self._done:
+            self._finalize(req)
+
+
+class Gateway:
+    """The single public entry point over `SDAIController` + frontend."""
+
+    def __init__(self, controller: SDAIController,
+                 cfg: Optional[GatewayConfig] = None):
+        self.c = controller
+        self.cfg = cfg if cfg is not None else GatewayConfig()
+        self.stats = GatewayStats()
+        self.admin = AdminAPI(controller, gateway=self)
+        self._inflight: Dict[str, int] = {}
+        self._draining: set = set()
+
+    # ------------------------------------------------------------- #
+    def models(self) -> List[str]:
+        """Every model currently served behind the unified endpoint."""
+        return self.c.replicas.models()
+
+    def inflight(self, model: str) -> int:
+        return self._inflight.get(model, 0)
+
+    # ------------------------------------------------------------- #
+    def _pump(self):
+        self.c.fleet.pump()
+
+    def _release(self, model: str):
+        n = self._inflight.get(model, 0)
+        if n > 0:
+            self._inflight[model] = n - 1
+
+    def _queue_depth(self, model: str) -> int:
+        """Aggregate scheduler backlog across the model's live replicas."""
+        depth = 0
+        for info in self.c.replicas.for_model(model):
+            node = self.c.fleet.nodes.get(info.key.node_id)
+            if node is None or not node.alive:
+                continue
+            inst = node.instances.get(info.key.instance_id)
+            if inst is not None and inst.engine is not None:
+                depth += inst.engine.scheduler.depth
+        return depth
+
+    @staticmethod
+    def _validation_error(greq: GenerationRequest) -> Optional[APIError]:
+        if not greq.prompt:
+            return APIError(ErrorCode.INVALID_REQUEST,
+                            "prompt must contain at least one token")
+        if greq.sampling.max_tokens < 1:
+            return APIError(ErrorCode.INVALID_REQUEST,
+                            "sampling.max_tokens must be >= 1")
+        return None
+
+    def _admission_error(self, model: str) -> Optional[APIError]:
+        if model in self._draining:
+            return APIError(ErrorCode.DRAINING,
+                            f"model {model!r} is draining")
+        lim = self.cfg.max_inflight_per_model
+        if lim is not None and self._inflight.get(model, 0) >= lim:
+            return APIError(
+                ErrorCode.OVERLOADED,
+                f"model {model!r} at max in-flight ({lim})")
+        qlim = self.cfg.max_queue_depth_per_model
+        if qlim is not None and self._queue_depth(model) >= qlim:
+            return APIError(
+                ErrorCode.OVERLOADED,
+                f"model {model!r} backend queue depth >= {qlim}")
+        return None
+
+    def _make_internal(self, greq: GenerationRequest,
+                       handle: GenerationHandle) -> Request:
+        return Request(model=greq.model, prompt=list(greq.prompt),
+                       sampling=greq.sampling,
+                       on_token=handle._on_token,
+                       on_finish=handle._on_finish)
+
+    # ------------------------------------------------------------- #
+    def submit(self, model: Union[str, GenerationRequest],
+               prompt: Optional[Sequence[int]] = None,
+               sampling: Optional[SamplingParams] = None
+               ) -> GenerationHandle:
+        """Route one request; returns immediately with an async handle.
+        Admission-control rejections come back as an already-finished
+        handle whose response carries `ErrorCode.OVERLOADED`/`DRAINING`."""
+        if isinstance(model, GenerationRequest):
+            greq = model
+        else:
+            greq = GenerationRequest(model=model, prompt=tuple(prompt),
+                                     sampling=sampling or SamplingParams())
+        handle = GenerationHandle(self, greq)
+        handle.internal = self._make_internal(greq, handle)
+        self.stats.submitted += 1
+        err = self._validation_error(greq)
+        if err is not None:
+            handle._reject(err)
+            return handle
+        err = self._admission_error(greq.model)
+        if err is not None:
+            if err.code is ErrorCode.DRAINING:
+                self.stats.rejected_draining += 1
+            else:
+                self.stats.rejected_overloaded += 1
+            handle._reject(err)
+            return handle
+        handle._admitted = True
+        self._inflight[greq.model] = self._inflight.get(greq.model, 0) + 1
+        self.c.frontend.submit(handle.internal)
+        return handle
+
+    def generate(self, model: Union[str, GenerationRequest],
+                 prompt: Optional[Sequence[int]] = None,
+                 sampling: Optional[SamplingParams] = None
+                 ) -> GenerationResponse:
+        """Blocking generate: submit and drive the fleet to completion."""
+        return self.submit(model, prompt, sampling).result()
+
+    def generate_batch(self, requests: Sequence[GenerationRequest]
+                       ) -> List[GenerationResponse]:
+        """Submit a batch, then pump the whole fleet until every request
+        settles — replicas decode concurrently (continuous batching
+        across the fleet, not sequential per-request pumping)."""
+        handles = [self.submit(r) for r in requests]
+        pumps = 0
+        while any(not h.done for h in handles):
+            if pumps >= self.cfg.max_pump_steps:
+                for h in handles:
+                    if not h.done:
+                        h._timeout()
+                break
+            self._pump()
+            pumps += 1
+        return [h.response for h in handles]
+
+    def stream(self, model: Union[str, GenerationRequest],
+               prompt: Optional[Sequence[int]] = None,
+               sampling: Optional[SamplingParams] = None
+               ) -> Iterator[StreamEvent]:
+        """Convenience: submit + stream in one call."""
+        return self.submit(model, prompt, sampling).stream()

@@ -20,7 +20,7 @@ from repro.cluster.hardware import (NodeClass, NODE_CLASSES,
                                     RUNTIME_RESERVE_FRACTION)
 from repro.configs.base import ArchConfig, BYTES
 from repro.serving.engine import InferenceEngine, EngineConfig
-from repro.serving.request import Request
+from repro.serving.request import CODE_ENGINE_FAILED, Request
 
 _inst_ids = itertools.count()
 
@@ -157,23 +157,35 @@ class BackendNode:
     # ------------------------------------------------------------- #
     def submit(self, instance_id: int, req: Request) -> bool:
         if not self._alive:
-            req.finish(error=f"node {self.node_id} down")
+            req.finish(error=f"node {self.node_id} down",
+                       code=CODE_ENGINE_FAILED)
             return False
         inst = self.instances.get(instance_id)
         if inst is None:
-            req.finish(error="instance gone")
+            req.finish(error="instance gone", code=CODE_ENGINE_FAILED)
             return False
         req.node = self.node_id
         req.replica = str(instance_id)
         if inst.engine:
             return inst.engine.submit(req)
-        inst.sim_active += 1            # accounted mode: latency model
-        n = min(req.sampling.max_tokens, 8)
-        req.output = list(range(n))
-        req.first_token_at = time.monotonic()
+        # accounted mode: synthetic tokens through the same emit/finish
+        # streaming path as real engines, honoring sampling.max_tokens
+        inst.sim_active += 1
+        for t in range(max(req.sampling.max_tokens, 0)):
+            tok = (req.request_id + t) % max(inst.cfg.vocab, 1)
+            req.emit(tok)
+            if req.sampling.eos_id >= 0 and tok == req.sampling.eos_id:
+                break
         req.finish()
         inst.sim_active -= 1
         return True
+
+    def cancel(self, instance_id: int, request_id: int) -> bool:
+        """Abort a request on one of this node's engines (frees its slot)."""
+        inst = self.instances.get(instance_id)
+        if inst is None or inst.engine is None:
+            return False
+        return inst.engine.cancel(request_id)
 
     def pump(self, max_steps: int = 1):
         """Advance all engines (the node's serving loop)."""

@@ -1,5 +1,12 @@
-"""Client Interface — the OpenWebUI analogue: one logical endpoint for every
-deployed model; the user never sees nodes, replicas, or routing."""
+"""Client Interface — back-compat shim over the Gateway API v1.
+
+Historically the OpenWebUI analogue: one logical endpoint for every
+deployed model.  New code should use `repro.api.Gateway` directly — it
+adds streaming, async handles, admission control, and frozen response
+types.  `Client` survives as a thin adapter that routes through a
+`Gateway` but keeps returning the internal mutable `Request` objects the
+seed API exposed.
+"""
 from __future__ import annotations
 
 from typing import List, Optional
@@ -11,26 +18,32 @@ from repro.serving.sampler import SamplingParams
 
 class Client:
     def __init__(self, controller: SDAIController):
+        # imported lazily: repro.api builds on repro.core, and this shim
+        # is the one place the dependency points back up
+        from repro.api.gateway import Gateway, GatewayConfig
         self.c = controller
+        # stream retries swap the handle's internal Request; this shim
+        # hands the internal Request to callers, so hidden re-routing
+        # would leave them polling a stale object — keep seed semantics
+        self.gateway = Gateway(controller,
+                               GatewayConfig(max_stream_retries=0))
 
     def models(self) -> List[str]:
         """Every model currently served (across all nodes)."""
-        return self.c.replicas.models()
+        return self.gateway.models()
 
     def submit(self, model: str, prompt: List[int],
                sampling: Optional[SamplingParams] = None) -> Request:
-        req = Request(model=model, prompt=prompt,
-                      sampling=sampling or SamplingParams())
-        self.c.frontend.submit(req)
-        return req
+        handle = self.gateway.submit(model, prompt, sampling)
+        return handle.internal
 
     def generate(self, model: str, prompt: List[int],
                  sampling: Optional[SamplingParams] = None,
                  max_pump_steps: int = 10_000) -> Request:
         """Submit and drive the fleet until the request completes."""
-        req = self.submit(model, prompt, sampling)
+        handle = self.gateway.submit(model, prompt, sampling)
         steps = 0
-        while req.finished_at is None and steps < max_pump_steps:
+        while not handle.done and steps < max_pump_steps:
             self.c.fleet.pump()
             steps += 1
-        return req
+        return handle.internal

@@ -37,18 +37,18 @@ class ControllerConfig:
 
 class SDAIController:
     def __init__(self, fleet: Fleet, catalog: ModelCatalog,
-                 cfg: ControllerConfig = ControllerConfig(),
+                 cfg: Optional[ControllerConfig] = None,
                  clock: Callable[[], float] = time.monotonic):
         self.fleet = fleet
         self.catalog = catalog
-        self.cfg = cfg
+        self.cfg = cfg if cfg is not None else ControllerConfig()
         self.clock = clock
         self.nodes = NodeRegistry()
         self.replicas = ReplicaRegistry()
-        self.monitor = HealthMonitor(cfg.health, clock=clock)
+        self.monitor = HealthMonitor(self.cfg.health, clock=clock)
         self.bus = EventBus()
         self.frontend = ServiceFrontend(fleet, self.replicas, self.monitor,
-                                        cfg.frontend)
+                                        self.cfg.frontend)
         self.demands: Dict[str, ModelDemand] = {}
         self._dead_nodes: set = set()
 
@@ -184,33 +184,44 @@ class SDAIController:
         plan = place(cap, fill, fill=True)
         self._execute(plan)
 
+    def remove_replicas(self, model: str, keep: int = 0) -> int:
+        """Retire all but the first `keep` replicas of `model`.  In-flight
+        and queued requests on a retired engine are finished with a
+        structured error (streaming handles re-route or surface it) —
+        never silently stranded."""
+        removed = 0
+        for info in self.replicas.for_model(model)[keep:]:
+            node = self.fleet.nodes.get(info.key.node_id)
+            if node is not None:
+                inst = node.instances.get(info.key.instance_id)
+                if inst is not None and inst.engine is not None:
+                    inst.engine.fail()
+                node.undeploy(info.key.instance_id)
+            self.replicas.remove(info.key)
+            removed += 1
+        return removed
+
+    def undeploy_model(self, model: str) -> int:
+        """Remove every replica of `model` from the fleet and drop its
+        demand (so reallocation stops restoring it)."""
+        removed = self.remove_replicas(model, keep=0)
+        self.demands.pop(model, None)
+        self.bus.emit("model_undeployed", model=model, removed=removed)
+        return removed
+
+    def node_alive(self, nid: str) -> bool:
+        node = self.fleet.nodes.get(nid)
+        return node is not None and node.alive \
+            and nid not in self._dead_nodes
+
     # ---------------------------------------------------------------- #
     def dashboard(self) -> Dict:
-        """The SDAI Interface overview (paper Fig. 3)."""
-        agents = {}
-        for nid in self.nodes.ids():
-            node = self.fleet.nodes.get(nid)
-            alive = node is not None and node.alive \
-                and nid not in self._dead_nodes
-            agents[nid] = {
-                "class": node.klass.name if node else "?",
-                "alive": alive,
-                "health": self.monitor.status(nid).value,
-                "hbm_used": node.hbm_used if node and alive else 0,
-                "hbm_budget": node.hbm_budget if node else 0,
-                "instances": [
-                    {"model": r.model_name, "quantize": r.quantize}
-                    for r in self.replicas.on_node(nid)] if alive else [],
-            }
-        return {
-            "connected": sum(1 for a in agents.values() if a["alive"]),
-            "total": len(agents),
-            "agents": agents,
-            "models": {m: len(self.replicas.for_model(m))
-                       for m in self.replicas.models()},
-            "routing": self.frontend.routing_table(),
-            "last_update": self.clock(),
-        }
+        """The SDAI Interface overview (paper Fig. 3).
+
+        Back-compat: the typed view is `repro.api.AdminAPI.snapshot()`;
+        this returns the same data as the legacy dict shape."""
+        from repro.api.admin import AdminAPI
+        return AdminAPI(self).snapshot().to_dict()
 
     def fleet_utilization(self) -> float:
         used = tot = 0

@@ -15,7 +15,8 @@ from typing import Dict, List, Optional
 from repro.cluster.fleet import Fleet
 from repro.core.health import HealthMonitor, NodeHealth
 from repro.core.registry import ReplicaKey, ReplicaRegistry
-from repro.serving.request import Request, RequestState
+from repro.serving.request import (CODE_ENGINE_FAILED, CODE_NO_BACKEND,
+                                   Request)
 
 
 @dataclasses.dataclass
@@ -37,11 +38,11 @@ class FrontendStats:
 class ServiceFrontend:
     def __init__(self, fleet: Fleet, replicas: ReplicaRegistry,
                  monitor: HealthMonitor,
-                 cfg: FrontendConfig = FrontendConfig()):
+                 cfg: Optional[FrontendConfig] = None):
         self.fleet = fleet
         self.replicas = replicas
         self.monitor = monitor
-        self.cfg = cfg
+        self.cfg = cfg if cfg is not None else FrontendConfig()
         self.stats = FrontendStats()
         self._last_pick: Dict[str, int] = {}
         self._pick_seq = 0
@@ -95,34 +96,48 @@ class ServiceFrontend:
     # ------------------------------------------------------------- #
     def submit(self, req: Request) -> bool:
         """Route with health-checked failover: on backend failure the
-        request transparently retries on the next-best replica."""
+        request transparently retries on the next-best replica.
+
+        Finish callbacks are suppressed while the retry loop runs so a
+        streaming handle never sees a transient attempt failure as the
+        request's final outcome; the settled outcome (success, routed, or
+        terminal failure) fires exactly once on exit."""
         tried: set = set()
-        for attempt in range(self.cfg.max_retries + 1):
-            key = self.pick(req.model, exclude=tried)
-            if key is None:
-                self.stats.rejected_no_backend += 1
-                req.finish(error="no healthy backend")
-                return False
-            tried.add(key)
-            node = self.fleet.nodes[key.node_id]
-            t0 = time.monotonic()
-            ok = node.submit(key.instance_id, req)
-            if ok:
-                self.stats.routed += 1
-                rk = str(key)
-                self.stats.per_replica[rk] = \
-                    self.stats.per_replica.get(rk, 0) + 1
-                self.monitor.observe_latency(rk, time.monotonic() - t0)
-                return True
-            # backend refused / died mid-submit: reset & fail over
-            self.stats.retried += 1
-            req.retries += 1
-            req.state = RequestState.QUEUED
-            req.error = ""
-            req.finished_at = None
-        self.stats.failed += 1
-        req.finish(error="all replicas failed")
-        return False
+        last_code = CODE_ENGINE_FAILED
+        req._suppress_finish = True
+        try:
+            for attempt in range(self.cfg.max_retries + 1):
+                key = self.pick(req.model, exclude=tried)
+                if key is None:
+                    self.stats.rejected_no_backend += 1
+                    req.finish(error="no healthy backend",
+                               code=CODE_NO_BACKEND)
+                    return False
+                tried.add(key)
+                node = self.fleet.nodes[key.node_id]
+                t0 = time.monotonic()
+                ok = node.submit(key.instance_id, req)
+                if ok:
+                    self.stats.routed += 1
+                    rk = str(key)
+                    self.stats.per_replica[rk] = \
+                        self.stats.per_replica.get(rk, 0) + 1
+                    self.monitor.observe_latency(rk, time.monotonic() - t0)
+                    return True
+                # backend refused / died mid-submit: reset & fail over
+                self.stats.retried += 1
+                if req.error_code:
+                    last_code = req.error_code
+                req.reset_for_retry()
+            self.stats.failed += 1
+            # keep the last attempt's class: all-queues-full must surface
+            # as OVERLOADED (retryable 429), not an engine failure
+            req.finish(error="all replicas failed", code=last_code)
+            return False
+        finally:
+            req._suppress_finish = False
+            if req.finished_at is not None:
+                req._fire_finish()
 
     # ------------------------------------------------------------- #
     def routing_table(self) -> Dict[str, List[str]]:

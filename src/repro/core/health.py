@@ -33,9 +33,9 @@ class HealthMonitor:
     *heartbeat ages* (how the controller's tick loop detects silent
     failures in the first place)."""
 
-    def __init__(self, cfg: HealthConfig = HealthConfig(),
+    def __init__(self, cfg: Optional[HealthConfig] = None,
                  clock: Callable[[], float] = time.monotonic):
-        self.cfg = cfg
+        self.cfg = cfg if cfg is not None else HealthConfig()
         self.clock = clock
         self.last_seen: Dict[str, float] = {}
         self.latency_ewma: Dict[str, float] = {}

@@ -20,7 +20,8 @@ from repro.configs.base import ArchConfig
 from repro.models import build
 from repro.serving import quantization as q_lib
 from repro.serving.kv_cache import SlotPool, write_slot, cache_bytes
-from repro.serving.request import Request, RequestState
+from repro.serving.request import (CODE_ENGINE_FAILED, CODE_OVERLOADED,
+                                   Request, RequestState)
 from repro.serving.sampler import SamplingParams
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
@@ -111,18 +112,29 @@ class InferenceEngine:
 
     def submit(self, req: Request) -> bool:
         if self._dead:
-            req.finish(error="engine dead")
+            req.finish(error="engine dead", code=CODE_ENGINE_FAILED)
             return False
         return self.scheduler.submit(req)
 
     def fail(self):
         """Failure injection: node/instance crash."""
         self._dead = True
-        for req in list(self.slot_req.values()):
-            req.finish(error="engine crashed")
-        for req in self.scheduler.queue:
-            req.finish(error="engine crashed")
+        doomed = list(self.slot_req.values()) + list(self.scheduler.queue)
+        self.slot_req.clear()
         self.scheduler.queue.clear()
+        for req in doomed:
+            req.finish(error="engine crashed", code=CODE_ENGINE_FAILED)
+
+    def cancel(self, request_id: int) -> bool:
+        """Abort a queued or in-flight request, freeing its slot."""
+        if self.scheduler.cancel(request_id):
+            return True
+        for slot, req in list(self.slot_req.items()):
+            if req.request_id == request_id:
+                del self.slot_req[slot]
+                self.pool.release(slot)
+                return True
+        return False
 
     @property
     def alive(self) -> bool:
@@ -148,7 +160,7 @@ class InferenceEngine:
         for req in self.scheduler.next_prefills(len(self.pool.free)):
             slot = self.pool.alloc(req.request_id, len(req.prompt))
             if slot is None:
-                req.finish(error="no capacity")
+                req.finish(error="no capacity", code=CODE_OVERLOADED)
                 continue
             req.state = RequestState.PREFILLING
             tokens = jnp.asarray([req.prompt], jnp.int32)
@@ -162,8 +174,7 @@ class InferenceEngine:
                 lg = logits[0].astype(jnp.float32) / \
                     req.sampling.temperature
                 first = int(jax.random.categorical(sk, lg))
-            req.first_token_at = time.monotonic()
-            req.output.append(first)
+            req.emit(first)
             req.state = RequestState.DECODING
             self.slot_req[slot] = req
             self.pos = self.pos.at[slot].set(int(pos1[0]) + 1)
@@ -185,7 +196,7 @@ class InferenceEngine:
             active = list(self.slot_req.items())
             for slot, req in active:
                 tok = int(toks_host[slot])
-                req.output.append(tok)
+                req.emit(tok)
                 self.pool.advance(slot)
                 emitted += 1
                 self.total_tokens += 1

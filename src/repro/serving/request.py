@@ -1,11 +1,24 @@
-"""Serving request/response types shared by engine, frontend, and client."""
+"""Serving request/response types shared by engine, frontend, and client.
+
+`Request` is the *internal, mutable* unit of work that flows through the
+frontend, nodes, and engines.  Public callers should use the frozen types
+in `repro.api` (`GenerationRequest` / `GenerationResponse` /
+`StreamEvent`); the Gateway translates between the two.
+
+Streaming contract: engines (and accounted-mode nodes) deliver every
+generated token through `Request.emit`, which invokes the `on_token`
+callback, and report completion through `Request.finish`, which invokes
+`on_finish` exactly once.  The frontend suppresses `on_finish` while it is
+still retrying across replicas so a handle never observes a transient
+attempt failure as the final outcome.
+"""
 from __future__ import annotations
 
 import dataclasses
 import enum
 import itertools
 import time
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 from repro.serving.sampler import SamplingParams
 
@@ -20,11 +33,21 @@ class RequestState(enum.Enum):
     FAILED = "failed"
 
 
+# Internal error-code strings; mirrored 1:1 by `repro.api.types.ErrorCode`
+# so the gateway never has to parse human-readable error messages.
+CODE_NO_BACKEND = "no_backend"
+CODE_OVERLOADED = "overloaded"
+CODE_ENGINE_FAILED = "engine_failed"
+CODE_CANCELLED = "cancelled"
+CODE_TIMEOUT = "timeout"
+
+
 @dataclasses.dataclass
 class Request:
     model: str
     prompt: List[int]                         # token ids
-    sampling: SamplingParams = SamplingParams()
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
     request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
     state: RequestState = RequestState.QUEUED
     output: List[int] = dataclasses.field(default_factory=list)
@@ -32,10 +55,23 @@ class Request:
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
     error: str = ""
+    error_code: str = ""
+    cancelled: bool = False
     # routing metadata (filled by frontend)
     node: str = ""
     replica: str = ""
     retries: int = 0
+    # streaming hooks (set by the Gateway; None => no-op)
+    on_token: Optional[Callable[["Request", int], None]] = \
+        dataclasses.field(default=None, repr=False)
+    on_finish: Optional[Callable[["Request"], None]] = \
+        dataclasses.field(default=None, repr=False)
+    # routing-in-progress: the frontend holds finish callbacks until the
+    # retry loop settles on a final outcome
+    _suppress_finish: bool = dataclasses.field(
+        default=False, init=False, repr=False)
+    _finish_fired: bool = dataclasses.field(
+        default=False, init=False, repr=False)
 
     @property
     def ttft(self) -> Optional[float]:
@@ -49,7 +85,35 @@ class Request:
             return None
         return self.finished_at - self.created_at
 
-    def finish(self, error: str = ""):
+    # ------------------------------------------------------------- #
+    def emit(self, tok: int):
+        """Deliver one generated token (engine -> stream callback)."""
+        if self.first_token_at is None:
+            self.first_token_at = time.monotonic()
+        self.output.append(tok)
+        if self.on_token is not None:
+            self.on_token(self, tok)
+
+    def finish(self, error: str = "", code: str = ""):
         self.finished_at = time.monotonic()
         self.error = error
+        self.error_code = code or (CODE_ENGINE_FAILED if error else "")
         self.state = RequestState.FAILED if error else RequestState.FINISHED
+        self._fire_finish()
+
+    def _fire_finish(self):
+        if self._suppress_finish or self._finish_fired:
+            return
+        self._finish_fired = True
+        if self.on_finish is not None:
+            self.on_finish(self)
+
+    def reset_for_retry(self):
+        """Frontend failover: clear a failed attempt so the request can be
+        resubmitted to the next-best replica."""
+        self.retries += 1
+        self.state = RequestState.QUEUED
+        self.error = ""
+        self.error_code = ""
+        self.finished_at = None
+        self._finish_fired = False

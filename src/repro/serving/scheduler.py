@@ -11,7 +11,7 @@ import dataclasses
 from collections import deque
 from typing import Deque, List, Optional
 
-from repro.serving.request import Request, RequestState
+from repro.serving.request import CODE_OVERLOADED, Request, RequestState
 
 
 @dataclasses.dataclass
@@ -21,19 +21,26 @@ class SchedulerConfig:
 
 
 class Scheduler:
-    def __init__(self, cfg: SchedulerConfig = SchedulerConfig()):
-        self.cfg = cfg
+    def __init__(self, cfg: Optional[SchedulerConfig] = None):
+        self.cfg = cfg if cfg is not None else SchedulerConfig()
         self.queue: Deque[Request] = deque()
         self.rejected = 0
 
     def submit(self, req: Request) -> bool:
         if len(self.queue) >= self.cfg.max_queue:
             self.rejected += 1
-            req.finish(error="queue full")
+            req.finish(error="queue full", code=CODE_OVERLOADED)
             return False
         req.state = RequestState.QUEUED
         self.queue.append(req)
         return True
+
+    def cancel(self, request_id: int) -> bool:
+        for req in self.queue:
+            if req.request_id == request_id:
+                self.queue.remove(req)
+                return True
+        return False
 
     def next_prefills(self, free_slots: int) -> List[Request]:
         out = []

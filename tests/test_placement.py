@@ -3,7 +3,7 @@ core invariants."""
 import dataclasses
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import ZOO, ARCHS
 from repro.configs.base import ArchConfig
