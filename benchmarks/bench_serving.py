@@ -1,9 +1,13 @@
 """Live serving throughput/latency on CPU (tiny model) through Gateway API
-v1: batched decode tokens/s, TTFT from frozen responses, streaming-path
-overhead, and the quantized-engine memory ratio."""
+v1, plus the device-resident hot-path study: fused K-step decode vs
+single-step dispatch (dispatches/token, host syncs/token, tok/s, p50/p95
+step time).  Writes ``BENCH_serving.json`` for CI's run-only smoke check.
+"""
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
 
@@ -13,7 +17,8 @@ from repro.configs import ARCHS
 from repro.core import (ModelCatalog, ReplicaInfo, ReplicaKey,
                         SDAIController)
 from repro.models import build
-from repro.serving import SamplingParams
+from repro.serving import (EngineConfig, InferenceEngine, Request,
+                           SamplingParams)
 
 _cache = {}
 
@@ -40,8 +45,77 @@ def _stack(quantize=""):
     return cfg, inst, Gateway(ctrl)
 
 
-def run(n_requests: int = 12, max_tokens: int = 24):
+def _pct(sorted_vals, q):
+    if not sorted_vals:
+        return 0.0
+    i = min(int(q * len(sorted_vals)), len(sorted_vals) - 1)
+    return sorted_vals[i]
+
+
+def _fused_study(n_requests: int = 8, max_tokens: int = 32,
+                 ks=(1, 8)) -> dict:
+    """Engine-level dispatch-discipline comparison: same workload, same
+    params, K=1 (the per-token legacy loop) vs fused K-step blocks.
+    Counters are deterministic; timings are informational."""
+    cfg = ARCHS["olmo-1b"].reduced()
+    params = _store(cfg)
+    out = {}
+    for k in ks:
+        eng = InferenceEngine(cfg, params,
+                              EngineConfig(n_slots=4, max_len=64,
+                                           decode_block=k))
+        # compile outside the clock: 5 warmups cover both admission batch
+        # shapes the run will see (a full group of 4 and a tail of 1)
+        for i in range(5):
+            eng.submit(Request(model=cfg.name, prompt=[1, 2, 3],
+                               sampling=SamplingParams(max_tokens=2)))
+        eng.run_until_done()
+        base = eng.perf_stats()
+        reqs = [Request(model=cfg.name, prompt=[1, 2, 3 + (i % 5)],
+                        sampling=SamplingParams(max_tokens=max_tokens))
+                for i in range(n_requests)]
+        for r in reqs:
+            eng.submit(r)
+        step_s = []
+        t0 = time.perf_counter()
+        while eng.slot_req or eng.scheduler.depth:
+            s0 = time.perf_counter()
+            eng.step()
+            step_s.append(time.perf_counter() - s0)
+        wall = time.perf_counter() - t0
+        stats = eng.perf_stats()
+        toks = stats["tokens"] - base["tokens"]
+        disp = stats["dispatches"] - base["dispatches"]
+        syncs = stats["host_syncs"] - base["host_syncs"]
+        step_s.sort()
+        out[f"k{k}"] = {
+            "decode_block": k,
+            "tokens": toks,
+            "dispatches": disp,
+            "host_syncs": syncs,
+            "dispatches_per_token": disp / max(toks, 1),
+            "host_syncs_per_token": syncs / max(toks, 1),
+            "tok_per_s": toks / wall if wall > 0 else 0.0,
+            "p50_step_ms": _pct(step_s, 0.50) * 1e3,
+            "p95_step_ms": _pct(step_s, 0.95) * 1e3,
+            "prefill_traces": stats["prefill_traces"],
+        }
+    lo, hi = f"k{ks[0]}", f"k{ks[-1]}"
+    out["reduction"] = {
+        "dispatches_per_token":
+            out[lo]["dispatches_per_token"] /
+            max(out[hi]["dispatches_per_token"], 1e-12),
+        "host_syncs_per_token":
+            out[lo]["host_syncs_per_token"] /
+            max(out[hi]["host_syncs_per_token"], 1e-12),
+    }
+    return out
+
+
+def run(n_requests: int = 12, max_tokens: int = 24,
+        json_path: str = "BENCH_serving.json"):
     rows = []
+    report = {"gateway": {}}
     for quant in ("", "int8"):
         cfg, inst, gw = _stack(quant)
         # warm-up/compile
@@ -67,6 +141,11 @@ def run(n_requests: int = 12, max_tokens: int = 24):
         rows.append((f"serving_mem_{tag}", 0.0,
                      f"params={mem['param_bytes']};"
                      f"cache={mem['cache_bytes']}"))
+        report["gateway"][tag] = {
+            "tok_per_s": toks / dt,
+            "mean_ttft_s": sum(ttfts) / len(ttfts) if ttfts else None,
+            "engine": inst.engine.perf_stats(),
+        }
         if not quant:
             # streaming path: per-event overhead vs blocking batch
             t0 = time.perf_counter()
@@ -77,4 +156,22 @@ def run(n_requests: int = 12, max_tokens: int = 24):
             dt = time.perf_counter() - t0
             rows.append(("serving_stream_event", dt / n_events * 1e6,
                          f"events={n_events}"))
+    ks = (1, 8)
+    fused = _fused_study(ks=ks)
+    report["fused"] = fused
+    red = fused["reduction"]
+    hi = f"k{ks[-1]}"
+    rows.append((f"serving_fused_{hi}_tok_per_s", 0.0,
+                 f"tok_per_s={fused[hi]['tok_per_s']:.1f};"
+                 f"p50_step_ms={fused[hi]['p50_step_ms']:.2f};"
+                 f"p95_step_ms={fused[hi]['p95_step_ms']:.2f}"))
+    rows.append(("serving_fused_dispatch_reduction", 0.0,
+                 f"dispatches_per_token_x{red['dispatches_per_token']:.1f};"
+                 f"host_syncs_per_token_x{red['host_syncs_per_token']:.1f}"))
+    Path(json_path).write_text(json.dumps(report, indent=2))
     return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.2f},{derived}")

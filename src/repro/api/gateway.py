@@ -14,8 +14,11 @@ One `Gateway` fronts the whole fleet (the paper's "single logical unit"):
 * `.admin`            — the typed control plane (`repro.api.admin.AdminAPI`)
 
 The simulated fleet is hand-pumped: handles advance engines lazily via
-`Gateway._pump()` whenever a caller blocks on `result()`/`stream()`, so
-tokens surface exactly as engine decode steps produce them.
+`Gateway._pump()` whenever a caller blocks on `result()`/`stream()`.  Each
+pump advances engines by one fused dispatch, so tokens surface in
+K-token quanta (`EngineConfig.decode_block`); streams still deliver every
+token as its own `StreamEvent`, and `cancel()` takes effect at the next
+dispatch boundary (the already-dispatched block is the last one emitted).
 """
 from __future__ import annotations
 
@@ -232,14 +235,38 @@ class Gateway:
                 depth += inst.engine.scheduler.depth
         return depth
 
-    @staticmethod
-    def _validation_error(greq: GenerationRequest) -> Optional[APIError]:
+    def _max_prompt_len(self, model: str) -> Optional[int]:
+        """Largest prompt any live replica of `model` can hold — replica
+        context minus the model's prefix (meta/vision) tokens, which
+        occupy cache slots ahead of the prompt.  None when nothing serves
+        the model (NO_BACKEND handles that case)."""
+        lens = [info.max_len for info in self.c.replicas.for_model(model)]
+        if not lens:
+            return None
+        prefix = 0
+        if model in self.c.catalog:
+            cfg = self.c.catalog.get(model)
+            prefix = (getattr(cfg, "n_meta_tokens", 0)
+                      + getattr(cfg, "n_prefix_tokens", 0))
+        return max(lens) - prefix
+
+    def _validation_error(self,
+                          greq: GenerationRequest) -> Optional[APIError]:
         if not greq.prompt:
             return APIError(ErrorCode.INVALID_REQUEST,
                             "prompt must contain at least one token")
         if greq.sampling.max_tokens < 1:
             return APIError(ErrorCode.INVALID_REQUEST,
                             "sampling.max_tokens must be >= 1")
+        ctx = self._max_prompt_len(greq.model)
+        if ctx is not None and len(greq.prompt) > ctx:
+            # a prompt no replica can ever hold is malformed input (400),
+            # not a transient capacity problem (429): reject at submit
+            # time, before it ever reaches a backend queue
+            return APIError(
+                ErrorCode.INVALID_REQUEST,
+                f"prompt length {len(greq.prompt)} exceeds the maximum "
+                f"context {ctx} of model {greq.model!r}")
         return None
 
     def _admission_error(self, model: str) -> Optional[APIError]:

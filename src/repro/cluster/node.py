@@ -127,7 +127,7 @@ class BackendNode:
     # ------------------------------------------------------------- #
     def deploy(self, cfg: ArchConfig, *, quantize: str = "",
                n_slots: int = 4, max_len: int = 128,
-               real: bool = True) -> Instance:
+               real: bool = True, decode_block: int = 4) -> Instance:
         """Launch one model instance (the controller's startup-script
         analogue).  Raises MemoryError when it would not fit — placement
         should never let that happen (property-tested)."""
@@ -145,7 +145,8 @@ class BackendNode:
                 engine = InferenceEngine(
                     cfg, params,
                     EngineConfig(n_slots=n_slots, max_len=max_len,
-                                 quantize=quantize, seed=self._seed))
+                                 quantize=quantize, seed=self._seed,
+                                 decode_block=decode_block))
         inst = Instance(next(_inst_ids), cfg.name, cfg, quantize, n_slots,
                         max_len, need, engine)
         self.instances[inst.instance_id] = inst

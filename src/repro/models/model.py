@@ -85,6 +85,7 @@ class Model:
             kw.pop("src_embeds", None)
             kw.pop("cache_len", None)
             kw.pop("kv_quant", None)
+            kw.pop("lengths", None)     # recurrent: exact-length batches
             return xl.prefill(params, self.cfg, tokens, **kw)
         return tf.prefill(params, self.cfg, tokens, **kw)
 

@@ -565,11 +565,20 @@ def cache_axes(cfg: ArchConfig, kv_quant: bool = False):
 
 def prefill(params, cfg: ArchConfig, tokens, *, prefix_embeds=None,
             src_embeds=None, cache_len: int = 0, sh: Sharder = _id_sh,
-            impl: str = "auto", kv_quant: bool = False):
+            impl: str = "auto", kv_quant: bool = False, lengths=None):
     """Run full-sequence forward, build a decode-ready cache.
 
     Returns (last_logits (B, V), cache, pos (B,)) — pos = index of the last
     valid cache slot.
+
+    lengths: optional (B,) int32 of *valid* (unpadded) token counts per
+    row, for bucketed prefill: prompts right-padded to a shared bucket
+    length share one trace, and each row's logits/pos are taken at its own
+    last real token.  Sound for causal attention families only — padded
+    positions sit beyond `pos` and are masked out of every later decode
+    read, then overwritten as the slot advances.  Recurrent families
+    (xlstm / hymba SSM states) fold pads into their state, so callers must
+    batch those at exact lengths instead.
     """
     if cfg.block == "xlstm":
         from repro.models import xlstm as xl
@@ -617,6 +626,11 @@ def prefill(params, cfg: ArchConfig, tokens, *, prefix_embeds=None,
             return h2, h_f
         _, states = jax.lax.scan(body, h, params["layers"])
         cache["ssm_h"] = states
+    if lengths is not None:
+        prefix = s_tot - tokens.shape[1]
+        pos = (prefix + lengths - 1).astype(jnp.int32)
+        last = jnp.take_along_axis(logits, pos[:, None, None], axis=1)[:, 0]
+        return last, cache, pos
     pos = jnp.full((b,), s_tot - 1, jnp.int32)
     return logits[:, -1], cache, pos
 

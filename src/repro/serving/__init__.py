@@ -1,7 +1,8 @@
 from repro.serving.engine import InferenceEngine, EngineConfig, EngineFailure
 from repro.serving.request import Request, RequestState
-from repro.serving.sampler import SamplingParams
+from repro.serving.sampler import SamplingParams, sample_batched
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
 __all__ = ["InferenceEngine", "EngineConfig", "EngineFailure", "Request",
-           "RequestState", "SamplingParams", "Scheduler", "SchedulerConfig"]
+           "RequestState", "SamplingParams", "sample_batched", "Scheduler",
+           "SchedulerConfig"]

@@ -1,28 +1,47 @@
 """Continuous-batching inference engine — the Ollama analogue each backend
 node runs, one per deployed model instance.
 
-Fully GPU/TPU-accelerated path (no CPU fallback, per the paper): prefill and
-decode are jitted; weights may be held quantized (int8/int4) at rest and
-dequantized on-chip per step.  A fixed slot pool gives O(1) admission,
-batched decode over all active slots, and exact byte accounting for the SDAI
-controller's VRAM-aware placement.
+Fully GPU/TPU-accelerated path (no CPU fallback, per the paper): the hot
+loop is *device-resident*.  Each `step()` issues at most two jitted
+dispatches:
+
+* **bucketed prefill** — queued prompts are padded to power-of-two length
+  buckets and admitted as one batch per bucket; the jitted call runs the
+  forward, scatters every row's cache into its slot, samples the first
+  token per row, and updates the persistent per-slot state arrays — all on
+  device.  Distinct prompt lengths inside one bucket share a single trace
+  (`prefill_traces` counts compiles to prove it).
+* **fused K-step decode** — a jitted `lax.scan` runs `decode_block`
+  decode+sample steps per dispatch, carrying `(cache, last_tok, pos, key)`
+  on device, applying per-slot temperature/top-k/top-p and an on-device
+  done mask (EOS or token budget) so finished slots stop advancing
+  mid-scan.  Exactly one blocking `device_get` brings back the
+  `(K, n_slots)` token block plus emit/done flags.
+
+Per-slot sampling params live in persistent device arrays written only on
+admission/release/cancel — no host->device uploads or `.at[].set()` loops
+inside the hot path.  Weights may be held quantized (int8/int4) at rest
+and dequantized on-chip per step.  A fixed slot pool gives O(1) admission,
+batched decode over all active slots, and exact byte accounting for the
+SDAI controller's VRAM-aware placement.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import build
 from repro.serving import quantization as q_lib
-from repro.serving.kv_cache import SlotPool, write_slot, cache_bytes
-from repro.serving.request import (CODE_ENGINE_FAILED, CODE_OVERLOADED,
-                                   Request, RequestState)
-from repro.serving.sampler import SamplingParams
+from repro.serving.kv_cache import SlotPool, cache_bytes, write_slots
+from repro.serving.request import (CODE_ENGINE_FAILED, CODE_INVALID_REQUEST,
+                                   CODE_OVERLOADED, Request, RequestState)
+from repro.serving.sampler import sample_batched
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
 
@@ -31,13 +50,22 @@ class EngineConfig:
     n_slots: int = 4
     max_len: int = 128
     quantize: str = ""            # "", "int8", "int4"
-    top_k: int = 0
+    top_k: int = 0                # engine-wide default (per-request wins)
     top_p: float = 1.0
     seed: int = 0
+    decode_block: int = 4         # K decode steps fused per dispatch
+    prefill_bucket_min: int = 8   # smallest power-of-two prompt bucket
 
 
 class EngineFailure(RuntimeError):
     pass
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
 
 
 class InferenceEngine:
@@ -52,6 +80,16 @@ class InferenceEngine:
         self.pool = SlotPool(engine_cfg.n_slots, engine_cfg.max_len)
         self._dead = False
         self._key = jax.random.PRNGKey(engine_cfg.seed)
+        # recurrent families fold right-pads into their state, so they
+        # batch prefills at exact lengths instead of padded buckets
+        self._supports_bucket = cfg.block not in ("xlstm", "hymba")
+        # meta/vision-prefix tokens occupy cache slots ahead of the prompt
+        self._prefix_tokens = (getattr(cfg, "n_meta_tokens", 0)
+                               + getattr(cfg, "n_prefix_tokens", 0))
+        # state-space caches are constant-size: only KV families run out
+        # of cache positions and must stop decoding at max_len
+        self._pos_limit = (engine_cfg.max_len if cfg.block != "xlstm"
+                           else 2 ** 30)
 
         if engine_cfg.quantize:
             bits = 8 if engine_cfg.quantize == "int8" else 4
@@ -65,38 +103,126 @@ class InferenceEngine:
         self.cache = self.model.init_cache(
             engine_cfg.n_slots, engine_cfg.max_len, src_len=src_len)
         self.slot_req: Dict[int, Request] = {}
-        self.pos = jnp.zeros((engine_cfg.n_slots,), jnp.int32)
-        self.last_tok = jnp.zeros((engine_cfg.n_slots,), jnp.int32)
+        # persistent per-slot device state: touched only by jitted
+        # admission / fused-decode calls and the (rare) cancel path
+        ns = engine_cfg.n_slots
+        self.pos = jnp.zeros((ns,), jnp.int32)
+        self.last_tok = jnp.zeros((ns,), jnp.int32)
+        self.active = jnp.zeros((ns,), bool)
+        self.remaining = jnp.zeros((ns,), jnp.int32)
+        self.temps = jnp.zeros((ns,), jnp.float32)
+        self.top_ks = jnp.zeros((ns,), jnp.int32)
+        self.top_ps = jnp.ones((ns,), jnp.float32)
+        self.eos_ids = jnp.full((ns,), -1, jnp.int32)
         # metrics
         self.total_tokens = 0
         self.total_steps = 0
         self.step_ewma_s = 0.0
+        self.dispatches = 0       # jitted calls issued
+        self.host_syncs = 0       # blocking device->host transfers
+        self.prefill_traces = 0   # compile-cache counter: bucketed prefill
+        self.decode_traces = 0    # compiles once per decode_block
         self._build_steps()
 
     # ------------------------------------------------------------- #
     def _build_steps(self):
-        model, cfg, ecfg = self.model, self.cfg, self.ecfg
+        model, ecfg = self.model, self.ecfg
 
-        def prefill_one(params, tokens, extra):
+        def prefill_admit(params, cache, last_tok, pos, active, remaining,
+                          temps, top_ks, top_ps, eos_ids, key,
+                          tokens, lengths, slots, r_temps, r_topk, r_topp,
+                          r_eos, r_budget, extra):
+            # Python side effect fires at trace time only: counts compiles
+            self.prefill_traces += 1
             p = self._dequant(params)
-            return model.prefill(p, tokens, cache_len=ecfg.max_len,
-                                 **extra)
+            kw = dict(extra)
+            if self._supports_bucket:
+                kw["lengths"] = lengths
+            logits, rows_cache, pos1 = model.prefill(
+                p, tokens, cache_len=ecfg.max_len, **kw)
+            cache = write_slots(cache, rows_cache, slots)
+            key, sk = jax.random.split(key)
+            first = sample_batched(logits, sk, r_temps, r_topk, r_topp)
+            done0 = ((r_budget <= 1) | ((r_eos >= 0) & (first == r_eos))
+                     # prompt fills the cache: no room to decode further
+                     | (pos1 + 1 >= self._pos_limit))
+            # scatter admission state; padded rows carry slot == n_slots
+            # and are dropped on device
+            last_tok = last_tok.at[slots].set(first, mode="drop")
+            pos = pos.at[slots].set(pos1 + 1, mode="drop")
+            active = active.at[slots].set(~done0, mode="drop")
+            remaining = remaining.at[slots].set(r_budget - 1, mode="drop")
+            temps = temps.at[slots].set(r_temps, mode="drop")
+            top_ks = top_ks.at[slots].set(r_topk, mode="drop")
+            top_ps = top_ps.at[slots].set(r_topp, mode="drop")
+            eos_ids = eos_ids.at[slots].set(r_eos, mode="drop")
+            return (cache, last_tok, pos, active, remaining, temps,
+                    top_ks, top_ps, eos_ids, key, first, done0)
 
-        def decode_batch(params, cache, token, pos, temps, key):
-            p = self._dequant(params)
-            logits, new_cache = model.decode(p, cache, token, pos)
-            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            lg = logits.astype(jnp.float32) / jnp.maximum(
-                temps[:, None], 1e-6)
-            if ecfg.top_k > 0:
-                kth = jax.lax.top_k(lg, ecfg.top_k)[0][..., -1:]
-                lg = jnp.where(lg < kth, -1e30, lg)
-            sampled = jax.random.categorical(key, lg, axis=-1)
-            tok = jnp.where(temps > 0, sampled.astype(jnp.int32), greedy)
-            return tok, new_cache
+        def make_fused_decode(mode: str):
+            # "greedy": every slot argmax — no PRNG, no sorts.
+            # "temp":   temperature only — one categorical, no sorts.
+            # "full":   per-slot top-k/top-p filters too.
+            def fused_decode(params, cache, last_tok, pos, active,
+                             remaining, temps, top_ks, top_ps, eos_ids,
+                             key):
+                self.decode_traces += 1
+                p = self._dequant(params)
 
-        self._prefill_one = jax.jit(prefill_one)
-        self._decode_batch = jax.jit(decode_batch, donate_argnums=(1,))
+                def body(carry, _):
+                    cache, last_tok, pos, active, remaining, key = carry
+                    logits, cache = model.decode(p, cache, last_tok, pos)
+                    if mode == "greedy":
+                        sampled = jnp.argmax(logits, axis=-1) \
+                            .astype(jnp.int32)
+                    else:
+                        key, sk = jax.random.split(key)
+                        sampled = sample_batched(
+                            logits, sk, temps, top_ks, top_ps,
+                            use_top_k=(mode == "full"),
+                            use_top_p=(mode == "full"))
+                    tok = jnp.where(active, sampled, last_tok)
+                    emit = active
+                    remaining = jnp.where(active, remaining - 1,
+                                          remaining)
+                    pos = pos + active.astype(jnp.int32)
+                    done = active & (((eos_ids >= 0) & (tok == eos_ids))
+                                     | (remaining <= 0)
+                                     # out of cache positions: the next
+                                     # write would fall past max_len
+                                     | (pos >= self._pos_limit))
+                    carry = (cache, tok, pos, active & ~done, remaining,
+                             key)
+                    return carry, (tok, emit, done)
+
+                init = (cache, last_tok, pos, active, remaining, key)
+                carry, (toks, emits, dones) = jax.lax.scan(
+                    body, init, None, length=ecfg.decode_block)
+                cache, last_tok, pos, active, remaining, key = carry
+                return (cache, last_tok, pos, active, remaining, key,
+                        toks, emits, dones)
+            return fused_decode
+
+        def clear_slots(last_tok, pos, active, remaining, temps, slots):
+            """Release/cancel: wipe per-slot device state so a freed slot
+            can never be decoded or sampled with stale values."""
+            last_tok = last_tok.at[slots].set(0, mode="drop")
+            pos = pos.at[slots].set(0, mode="drop")
+            active = active.at[slots].set(False, mode="drop")
+            remaining = remaining.at[slots].set(0, mode="drop")
+            temps = temps.at[slots].set(0.0, mode="drop")
+            return last_tok, pos, active, remaining, temps
+
+        self._prefill_admit = jax.jit(
+            prefill_admit, donate_argnums=tuple(range(1, 11)))
+        decode_donate = (1, 2, 3, 4, 5, 10)
+        # three variants; jax compiles each lazily on first use only
+        self._fused_decode = {
+            mode: jax.jit(make_fused_decode(mode),
+                          donate_argnums=decode_donate)
+            for mode in ("greedy", "temp", "full")}
+        self._clear_slots = jax.jit(
+            clear_slots, donate_argnums=(0, 1, 2, 3, 4))
 
     # ------------------------------------------------------------- #
     def _extra_inputs(self, batch: int):
@@ -110,9 +236,31 @@ class InferenceEngine:
                 (batch, self.ecfg.max_len, self.cfg.d_model), dt)
         return extra
 
+    def _bucket_of(self, prompt_len: int) -> int:
+        """Power-of-two padded length bucket (attention families); exact
+        length for recurrent families, which can't absorb pads.  Capped so
+        bucket + prefix (meta/vision) tokens never outgrow the pool
+        cache."""
+        if not self._supports_bucket:
+            return prompt_len
+        b = self.ecfg.prefill_bucket_min
+        while b < prompt_len:
+            b <<= 1
+        return min(b, self.ecfg.max_len - self._prefix_tokens)
+
+    # ------------------------------------------------------------- #
     def submit(self, req: Request) -> bool:
         if self._dead:
             req.finish(error="engine dead", code=CODE_ENGINE_FAILED)
+            return False
+        if len(req.prompt) + self._prefix_tokens > self.ecfg.max_len:
+            # malformed input, not a capacity problem: reject at submit
+            # time instead of surfacing OVERLOADED after dequeue
+            req.finish(
+                error=(f"prompt length {len(req.prompt)} (+ "
+                       f"{self._prefix_tokens} prefix tokens) exceeds "
+                       f"engine max_len {self.ecfg.max_len}"),
+                code=CODE_INVALID_REQUEST)
             return False
         return self.scheduler.submit(req)
 
@@ -126,15 +274,29 @@ class InferenceEngine:
             req.finish(error="engine crashed", code=CODE_ENGINE_FAILED)
 
     def cancel(self, request_id: int) -> bool:
-        """Abort a queued or in-flight request, freeing its slot."""
+        """Abort a queued or in-flight request, freeing its slot.  Takes
+        effect at the next dispatch boundary: the current fused block (if
+        any) has already been emitted."""
         if self.scheduler.cancel(request_id):
             return True
         for slot, req in list(self.slot_req.items()):
             if req.request_id == request_id:
                 del self.slot_req[slot]
                 self.pool.release(slot)
+                self._release_device_slot(slot)
                 return True
         return False
+
+    def _release_device_slot(self, slot: int):
+        """Zero the slot's persistent device state (done mask, sampling
+        temperature, budget) so the next fused dispatch can't decode or
+        sample it with stale values."""
+        idx = jnp.asarray([slot], jnp.int32)
+        (self.last_tok, self.pos, self.active, self.remaining,
+         self.temps) = self._clear_slots(
+            self.last_tok, self.pos, self.active, self.remaining,
+            self.temps, idx)
+        self.dispatches += 1
 
     @property
     def alive(self) -> bool:
@@ -151,77 +313,118 @@ class InferenceEngine:
 
     # ------------------------------------------------------------- #
     def step(self) -> int:
-        """One engine iteration: admit prefills, one batched decode.
-        Returns number of tokens emitted."""
+        """One engine iteration: admit one prefill bucket, then one fused
+        K-step decode dispatch.  Returns number of decode tokens
+        emitted."""
         if self._dead:
             raise EngineFailure("engine is dead")
         t0 = time.monotonic()
-        # ---- admissions
-        for req in self.scheduler.next_prefills(len(self.pool.free)):
-            slot = self.pool.alloc(req.request_id, len(req.prompt))
-            if slot is None:
-                req.finish(error="no capacity", code=CODE_OVERLOADED)
-                continue
-            req.state = RequestState.PREFILLING
-            tokens = jnp.asarray([req.prompt], jnp.int32)
-            extra = self._extra_inputs(1)
-            logits, one_cache, pos1 = self._prefill_one(
-                self.params, tokens, extra)
-            self.cache = write_slot(self.cache, one_cache, slot)
-            first = int(jnp.argmax(logits[0]))
-            if req.sampling.temperature > 0:
-                self._key, sk = jax.random.split(self._key)
-                lg = logits[0].astype(jnp.float32) / \
-                    req.sampling.temperature
-                first = int(jax.random.categorical(sk, lg))
-            req.emit(first)
-            req.state = RequestState.DECODING
-            self.slot_req[slot] = req
-            self.pos = self.pos.at[slot].set(int(pos1[0]) + 1)
-            self.last_tok = self.last_tok.at[slot].set(first)
-            self.total_tokens += 1
-            self._maybe_finish(slot, first)
-        # ---- batched decode
-        emitted = 0
-        if self.slot_req:
-            temps = jnp.asarray(
-                [self.slot_req[s].sampling.temperature
-                 if s in self.slot_req else 0.0
-                 for s in range(self.ecfg.n_slots)], jnp.float32)
-            self._key, sk = jax.random.split(self._key)
-            toks, self.cache = self._decode_batch(
-                self.params, self.cache, self.last_tok, self.pos, temps,
-                sk)
-            toks_host = jax.device_get(toks)
-            active = list(self.slot_req.items())
-            for slot, req in active:
-                tok = int(toks_host[slot])
-                req.emit(tok)
-                self.pool.advance(slot)
-                emitted += 1
-                self.total_tokens += 1
-                self.last_tok = self.last_tok.at[slot].set(tok)
-                self._maybe_finish(slot, tok)
-            adv = jnp.zeros((self.ecfg.n_slots,), jnp.int32)
-            for slot, _ in active:
-                adv = adv.at[slot].set(1)
-            self.pos = self.pos + adv
+        self._admit()
+        emitted = self._decode_block() if self.slot_req else 0
         self.total_steps += 1
         dt = time.monotonic() - t0
         self.step_ewma_s = 0.9 * self.step_ewma_s + 0.1 * dt \
             if self.total_steps > 1 else dt
         return emitted
 
-    def _maybe_finish(self, slot: int, tok: int):
-        req = self.slot_req.get(slot)
-        if req is None:
+    # ---- admissions: one bucketed batch prefill dispatch ---------- #
+    def _admit(self):
+        group = self.scheduler.next_prefill_bucket(
+            len(self.pool.free), self._bucket_of)
+        admitted: List[Tuple[int, Request]] = []
+        for req in group:
+            slot = self.pool.alloc(req.request_id, len(req.prompt))
+            if slot is None:                        # defensive; shouldn't
+                req.finish(error="no capacity",     # happen (free-count
+                           code=CODE_OVERLOADED)    # bounded above)
+                continue
+            req.state = RequestState.PREFILLING
+            admitted.append((slot, req))
+        if not admitted:
             return
-        done = (len(req.output) >= req.sampling.max_tokens or
-                (req.sampling.eos_id >= 0 and tok == req.sampling.eos_id))
-        if done:
-            req.finish()
-            del self.slot_req[slot]
-            self.pool.release(slot)
+        ecfg = self.ecfg
+        bucket = self._bucket_of(max(len(r.prompt) for _, r in admitted))
+        pad_n = _next_pow2(len(admitted))
+        toks = np.zeros((pad_n, bucket), np.int32)
+        lengths = np.ones((pad_n,), np.int32)
+        slots = np.full((pad_n,), ecfg.n_slots, np.int32)  # OOB => drop
+        r_temps = np.zeros((pad_n,), np.float32)
+        r_topk = np.zeros((pad_n,), np.int32)
+        r_topp = np.ones((pad_n,), np.float32)
+        r_eos = np.full((pad_n,), -1, np.int32)
+        r_budget = np.ones((pad_n,), np.int32)
+        for i, (slot, req) in enumerate(admitted):
+            pl = len(req.prompt)
+            toks[i, :pl] = req.prompt
+            lengths[i] = pl
+            slots[i] = slot
+            s = req.sampling
+            r_temps[i] = s.temperature
+            r_topk[i] = s.top_k if s.top_k > 0 else ecfg.top_k
+            r_topp[i] = s.top_p if s.top_p < 1.0 else ecfg.top_p
+            r_eos[i] = s.eos_id
+            r_budget[i] = s.max_tokens
+        extra = self._extra_inputs(pad_n)
+        (self.cache, self.last_tok, self.pos, self.active, self.remaining,
+         self.temps, self.top_ks, self.top_ps, self.eos_ids, self._key,
+         first, done0) = self._prefill_admit(
+            self.params, self.cache, self.last_tok, self.pos, self.active,
+            self.remaining, self.temps, self.top_ks, self.top_ps,
+            self.eos_ids, self._key, toks, lengths, slots, r_temps,
+            r_topk, r_topp, r_eos, r_budget, extra)
+        self.dispatches += 1
+        first_h, done_h = jax.device_get((first, done0))
+        self.host_syncs += 1
+        for i, (slot, req) in enumerate(admitted):
+            req.emit(int(first_h[i]))
+            req.state = RequestState.DECODING
+            self.total_tokens += 1
+            if done_h[i]:
+                req.finish()
+                self.pool.release(slot)
+            else:
+                self.slot_req[slot] = req
+
+    def _decode_mode(self) -> str:
+        """Pick the cheapest compiled decode variant the current batch
+        permits — the host knows every slot's sampling params, so sorts
+        and PRNG stay out of the program unless actually needed."""
+        sampling = [r.sampling for r in self.slot_req.values()
+                    if r.sampling.temperature > 0]
+        if not sampling:
+            return "greedy"
+        ecfg = self.ecfg
+        if any(s.top_k > 0 or s.top_p < 1.0 or ecfg.top_k > 0
+               or ecfg.top_p < 1.0 for s in sampling):
+            return "full"
+        return "temp"
+
+    # ---- decode: one fused K-step dispatch, one host sync --------- #
+    def _decode_block(self) -> int:
+        fn = self._fused_decode[self._decode_mode()]
+        (self.cache, self.last_tok, self.pos, self.active, self.remaining,
+         self._key, toks, emits, dones) = fn(
+            self.params, self.cache, self.last_tok, self.pos,
+            self.active, self.remaining, self.temps, self.top_ks,
+            self.top_ps, self.eos_ids, self._key)
+        self.dispatches += 1
+        toks_h, emit_h, done_h = jax.device_get((toks, emits, dones))
+        self.host_syncs += 1
+        emitted = 0
+        for slot, req in list(self.slot_req.items()):
+            col = emit_h[:, slot]
+            if not col.any():
+                continue
+            block = toks_h[:, slot][col].tolist()
+            req.emit_many(block)
+            self.pool.advance(slot, len(block))
+            emitted += len(block)
+            self.total_tokens += len(block)
+            if done_h[:, slot].any():
+                req.finish()
+                del self.slot_req[slot]
+                self.pool.release(slot)
+        return emitted
 
     def run_until_done(self, max_steps: int = 10_000) -> int:
         steps = 0
@@ -236,4 +439,20 @@ class InferenceEngine:
         return {
             "param_bytes": q_lib.tree_bytes(self.params),
             "cache_bytes": cache_bytes(self.cache),
+        }
+
+    def perf_stats(self) -> Dict[str, Any]:
+        """Dispatch/sync discipline counters (the paper's 'no CPU
+        fallback' claim, made measurable)."""
+        t = max(self.total_tokens, 1)
+        return {
+            "tokens": self.total_tokens,
+            "steps": self.total_steps,
+            "dispatches": self.dispatches,
+            "host_syncs": self.host_syncs,
+            "dispatches_per_token": self.dispatches / t,
+            "host_syncs_per_token": self.host_syncs / t,
+            "prefill_traces": self.prefill_traces,
+            "decode_traces": self.decode_traces,
+            "decode_block": self.ecfg.decode_block,
         }

@@ -32,8 +32,8 @@ class SlotPool:
         self.owners[slot] = request_id
         return slot
 
-    def advance(self, slot: int):
-        self.lengths[slot] = min(self.lengths[slot] + 1, self.max_len)
+    def advance(self, slot: int, n: int = 1):
+        self.lengths[slot] = min(self.lengths[slot] + n, self.max_len)
 
     def release(self, slot: int):
         if slot in self.lengths:
@@ -58,6 +58,26 @@ def write_slot(cache, slot_cache, slot: int, batch_axis: int = 1):
         return jax.lax.dynamic_update_slice_in_dim(
             pool, one.astype(pool.dtype), slot, axis=batch_axis)
     return jax.tree.map(upd, cache, slot_cache)
+
+
+def write_slots(cache, rows_cache, slots, batch_axis: int = 1):
+    """Scatter a *batch* of freshly-prefilled rows into the pool cache in
+    one op per leaf — jittable, so a whole admission bucket lands with a
+    single dispatch.
+
+    rows_cache leaves have the same shape as the pool leaves except the
+    batch axis, which is len(slots).  `slots` may be a traced int32 array;
+    out-of-range entries (>= n_slots) are dropped, which is how padded
+    bucket rows are discarded on device.
+    """
+    idx = jnp.asarray(slots, jnp.int32)
+
+    def upd(pool, rows):
+        moved = jnp.moveaxis(pool, batch_axis, 0)
+        rows_m = jnp.moveaxis(rows.astype(pool.dtype), batch_axis, 0)
+        out = moved.at[idx].set(rows_m, mode="drop")
+        return jnp.moveaxis(out, 0, batch_axis)
+    return jax.tree.map(upd, cache, rows_cache)
 
 
 def cache_bytes(cache) -> int:

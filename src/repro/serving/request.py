@@ -40,6 +40,7 @@ CODE_OVERLOADED = "overloaded"
 CODE_ENGINE_FAILED = "engine_failed"
 CODE_CANCELLED = "cancelled"
 CODE_TIMEOUT = "timeout"
+CODE_INVALID_REQUEST = "invalid_request"
 
 
 @dataclasses.dataclass
@@ -93,6 +94,13 @@ class Request:
         self.output.append(tok)
         if self.on_token is not None:
             self.on_token(self, tok)
+
+    def emit_many(self, toks):
+        """Deliver a block of tokens (one fused K-step engine dispatch).
+        Drives the per-token `emit` path in order, so the streaming
+        contract is byte-identical to K sequential `emit`s."""
+        for tok in toks:
+            self.emit(tok)
 
     def finish(self, error: str = "", code: str = ""):
         self.finished_at = time.monotonic()

@@ -16,6 +16,9 @@ class SamplingParams:
     eos_id: int = -1                  # -1 => never stops on token
 
 
+_NEG = -1e30
+
+
 def sample(logits, key, params: SamplingParams):
     """logits: (B, V) -> tokens (B,) int32."""
     if params.temperature <= 0.0:
@@ -23,12 +26,49 @@ def sample(logits, key, params: SamplingParams):
     lg = logits.astype(jnp.float32) / params.temperature
     if params.top_k > 0:
         kth = jax.lax.top_k(lg, params.top_k)[0][..., -1:]
-        lg = jnp.where(lg < kth, -1e30, lg)
+        lg = jnp.where(lg < kth, _NEG, lg)
     if params.top_p < 1.0:
         sorted_lg = jnp.sort(lg, axis=-1)[..., ::-1]
         probs = jax.nn.softmax(sorted_lg, axis=-1)
         cum = jnp.cumsum(probs, axis=-1)
         cutoff_idx = jnp.sum(cum < params.top_p, axis=-1, keepdims=True)
         cutoff = jnp.take_along_axis(sorted_lg, cutoff_idx, axis=-1)
-        lg = jnp.where(lg < cutoff, -1e30, lg)
+        lg = jnp.where(lg < cutoff, _NEG, lg)
     return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+
+def sample_batched(logits, key, temps, top_ks, top_ps, *,
+                   use_top_k: bool = True, use_top_p: bool = True):
+    """Per-row sampling with *traced* per-slot params — jittable, so the
+    engine's fused decode scan applies each slot's temperature/top-k/top-p
+    without a host round-trip.
+
+    logits: (B, V); temps: (B,) f32; top_ks: (B,) int32 (0 => off);
+    top_ps: (B,) f32 (1 => off).  Rows with temps <= 0 are greedy.
+    Matches `sample` exactly when every row shares one SamplingParams.
+
+    use_top_k / use_top_p are *static* (host-known) switches: when the
+    caller can prove no row filters, passing False elides the full-vocab
+    sorts from the compiled program — pure temperature sampling then
+    costs one categorical, as in the unbatched path.
+    """
+    v = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32) / jnp.maximum(temps[:, None], 1e-6)
+    if use_top_k:
+        # per-row traced k: threshold = k-th largest via sort
+        sorted_lg = jnp.sort(lg, axis=-1)[..., ::-1]
+        kth_idx = jnp.clip(top_ks - 1, 0, v - 1)
+        kth = jnp.take_along_axis(sorted_lg, kth_idx[:, None], axis=-1)
+        lg = jnp.where((top_ks[:, None] > 0) & (lg < kth), _NEG, lg)
+    if use_top_p:
+        # top-p on the (top-k-masked) distribution, per-row traced p
+        sorted2 = jnp.sort(lg, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted2, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cut_idx = jnp.sum(cum < top_ps[:, None], axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted2, jnp.clip(cut_idx, 0, v - 1),
+                                     axis=-1)
+        lg = jnp.where((top_ps[:, None] < 1.0) & (lg < cutoff), _NEG, lg)
+    sampled = jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+    return jnp.where(temps > 0.0, sampled, greedy)

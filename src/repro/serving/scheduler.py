@@ -2,21 +2,25 @@
 
 FCFS admission with prefill/decode interleaving: at each engine step, admit
 up to `max_prefill_per_step` queued requests into free slots, then run one
-batched decode over all active slots.  Tracks queue metrics the SDAI
-controller uses for load-based reallocation decisions.
+batched decode over all active slots.  Admission is *bucket-aware*: the
+engine pads prompts to power-of-two length buckets so one jitted prefill
+serves every length in a bucket, and the scheduler hands it a same-bucket
+batch (FCFS head plus any later queued requests that share the head's
+bucket) so the whole batch lands in a single dispatch.  Tracks queue
+metrics the SDAI controller uses for load-based reallocation decisions.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Callable, Deque, List, Optional
 
 from repro.serving.request import CODE_OVERLOADED, Request, RequestState
 
 
 @dataclasses.dataclass
 class SchedulerConfig:
-    max_prefill_per_step: int = 1
+    max_prefill_per_step: int = 4
     max_queue: int = 256
 
 
@@ -42,11 +46,28 @@ class Scheduler:
                 return True
         return False
 
-    def next_prefills(self, free_slots: int) -> List[Request]:
-        out = []
+    def next_prefill_bucket(self, free_slots: int,
+                            bucket_of: Callable[[int], int]
+                            ) -> List[Request]:
+        """Dequeue the FCFS head plus up to `max_prefill_per_step - 1`
+        later requests whose prompts fall in the *same* length bucket, so
+        the engine prefills them together in one jitted call.  The head is
+        always admitted (no starvation); requests from other buckets keep
+        their relative order for the next step."""
         n = min(free_slots, self.cfg.max_prefill_per_step, len(self.queue))
-        for _ in range(n):
-            out.append(self.queue.popleft())
+        if n <= 0:
+            return []
+        head = self.queue.popleft()
+        out = [head]
+        if n > 1:
+            hb = bucket_of(len(head.prompt))
+            rest: List[Request] = []
+            for req in self.queue:
+                if len(out) < n and bucket_of(len(req.prompt)) == hb:
+                    out.append(req)
+                else:
+                    rest.append(req)
+            self.queue = deque(rest)
         return out
 
     @property
