@@ -1,0 +1,73 @@
+"""Soft bench regression gate for CI.
+
+Compares deterministic dispatch-discipline counters from a fresh
+``BENCH_serving.json`` against the checked-in
+``benchmarks/baseline_serving.json``: the job fails when
+``dispatches_per_token`` or ``host_syncs_per_token`` regresses more than
+the budget (default 20%) for any fused-K variant.  Wall-clock metrics
+(tok/s, step percentiles) are machine-dependent and stay informational —
+they are printed but never gate.
+
+Usage:  python benchmarks/check_regression.py \
+            [BENCH_serving.json] [benchmarks/baseline_serving.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+GATED_METRICS = ("dispatches_per_token", "host_syncs_per_token")
+BUDGET = 0.20                 # allowed relative regression
+
+
+def main(argv):
+    current_path = Path(argv[1] if len(argv) > 1 else "BENCH_serving.json")
+    baseline_path = Path(argv[2] if len(argv) > 2
+                         else "benchmarks/baseline_serving.json")
+    current = json.loads(current_path.read_text())
+    baseline = json.loads(baseline_path.read_text())
+
+    failures = []
+    for variant, base in baseline["fused"].items():
+        if variant == "reduction":
+            continue
+        cur = current.get("fused", {}).get(variant)
+        if cur is None:
+            failures.append(f"{variant}: missing from {current_path}")
+            continue
+        for metric in GATED_METRICS:
+            b, c = base[metric], cur[metric]
+            limit = b * (1 + BUDGET)
+            status = "FAIL" if c > limit else "ok"
+            print(f"[{status}] fused.{variant}.{metric}: "
+                  f"current={c:.6f} baseline={b:.6f} "
+                  f"(limit={limit:.6f})")
+            if c > limit:
+                failures.append(
+                    f"fused.{variant}.{metric} regressed "
+                    f"{(c / b - 1) * 100:.1f}% (> {BUDGET * 100:.0f}%)")
+        # informational only — never gates
+        print(f"[info] fused.{variant}.tok_per_s: "
+              f"current={cur.get('tok_per_s', 0.0):.1f} "
+              f"baseline={base.get('tok_per_s', 0.0):.1f}")
+
+    rt = current.get("runtime")
+    if rt is not None:
+        print(f"[info] runtime: tenants={rt.get('tenants')} "
+              f"completed={rt.get('completed')} "
+              f"rate_limited={rt.get('rate_limited')} "
+              f"caller_pumps={rt.get('caller_pumps')} "
+              f"scale_ups={rt.get('scale_ups')}")
+
+    if failures:
+        print("\nBench regression gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nBench regression gate passed.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -2,23 +2,32 @@
 
     from repro.api import Gateway
     gw = Gateway(controller)
+    gw.start()                                            # background pumps
     resp = gw.generate("llama3.2-1b", [1, 2, 3])          # sync
-    handle = gw.submit("llama3.2-1b", [1, 2, 3])          # async
+    handle = gw.submit("llama3.2-1b", [1, 2, 3],
+                       tenant="acme")                     # async, tenanted
     for ev in handle.stream(): ...                        # streaming
+    gw.admin.set_tenant_quota("acme", requests_per_s=5)   # rate limits
     snap = gw.admin.snapshot()                            # typed admin
+    gw.stop()                                             # drain + join
 """
 from repro.api.admin import (AdminAPI, DeployResult, FleetSnapshot,
-                             InstanceSnapshot, ModelSnapshot, NodeSnapshot)
+                             InstanceSnapshot, ModelSnapshot, NodeSnapshot,
+                             TenantSnapshot)
 from repro.api.gateway import (Gateway, GatewayConfig, GatewayStats,
                                GenerationHandle)
+from repro.api.runtime import RuntimeConfig, RuntimeStats, ServingRuntime
 from repro.api.types import (API_VERSION, APIError, ErrorCode, GatewayError,
                              GenerationRequest, GenerationResponse,
                              StreamEvent, StreamEventType,
                              response_from_internal)
+from repro.core.frontend import TenantQuota
 
 __all__ = ["API_VERSION", "APIError", "AdminAPI", "DeployResult",
            "ErrorCode", "FleetSnapshot", "Gateway", "GatewayConfig",
            "GatewayError", "GatewayStats", "GenerationHandle",
            "GenerationRequest", "GenerationResponse", "InstanceSnapshot",
-           "ModelSnapshot", "NodeSnapshot", "StreamEvent",
-           "StreamEventType", "response_from_internal"]
+           "ModelSnapshot", "NodeSnapshot", "RuntimeConfig",
+           "RuntimeStats", "ServingRuntime", "StreamEvent",
+           "StreamEventType", "TenantQuota", "TenantSnapshot",
+           "response_from_internal"]

@@ -1,15 +1,18 @@
 """Gateway API v1 — typed admin surface (the SDAI dashboard, typed).
 
 `AdminAPI` is the control plane the old `SDAIController.dashboard()` dict
-grows into: frozen `FleetSnapshot`/`NodeSnapshot`/`InstanceSnapshot` views
-plus deploy / undeploy / scale / drain verbs.  `dashboard()` remains as a
-thin shim that renders `snapshot().to_dict()` in the legacy shape.
+grows into: frozen `FleetSnapshot`/`NodeSnapshot`/`InstanceSnapshot`/
+`TenantSnapshot` views plus deploy / undeploy / scale / drain verbs and
+per-tenant quota configuration.  `dashboard()` remains as a thin shim that
+renders `snapshot().to_dict()` in the legacy shape.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
+from repro.core.frontend import TenantQuota
 from repro.core.placement import ModelDemand
 
 if TYPE_CHECKING:                      # avoid import cycle at runtime
@@ -52,6 +55,17 @@ class ModelSnapshot:
 
 
 @dataclasses.dataclass(frozen=True)
+class TenantSnapshot:
+    """One tenant's configured quota + cumulative usage."""
+    tenant: str
+    requests_per_s: float          # 0 => unlimited
+    tokens_per_s: float            # 0 => unlimited
+    admitted: int
+    rate_limited: int
+    tokens_charged: int
+
+
+@dataclasses.dataclass(frozen=True)
 class FleetSnapshot:
     connected: int
     total: int
@@ -60,6 +74,7 @@ class FleetSnapshot:
     routing: Dict[str, Tuple[str, ...]]
     utilization: float
     last_update: float
+    tenants: Tuple[TenantSnapshot, ...] = ()
 
     def node(self, node_id: str) -> Optional[NodeSnapshot]:
         for n in self.nodes:
@@ -85,6 +100,13 @@ class FleetSnapshot:
                 } for n in self.nodes},
             "models": {m.name: m.replicas for m in self.models},
             "routing": {m: list(r) for m, r in self.routing.items()},
+            "tenants": {
+                t.tenant: {"requests_per_s": t.requests_per_s,
+                           "tokens_per_s": t.tokens_per_s,
+                           "admitted": t.admitted,
+                           "rate_limited": t.rate_limited,
+                           "tokens_charged": t.tokens_charged}
+                for t in self.tenants},
             "last_update": self.last_update,
         }
 
@@ -141,11 +163,21 @@ class AdminAPI:
             for m in c.replicas.models())
         routing = {m: tuple(str(k) for k in c.frontend.healthy_replicas(m))
                    for m in c.replicas.models()}
+        tenants = []
+        for name, entry in sorted(c.frontend.tenants.snapshot().items()):
+            quota, usage = entry["quota"], entry["usage"]
+            tenants.append(TenantSnapshot(
+                tenant=name,
+                requests_per_s=quota.requests_per_s if quota else 0.0,
+                tokens_per_s=quota.tokens_per_s if quota else 0.0,
+                admitted=usage.admitted,
+                rate_limited=usage.rate_limited,
+                tokens_charged=usage.tokens_charged))
         return FleetSnapshot(
             connected=sum(1 for n in nodes if n.alive),
             total=len(nodes), nodes=tuple(nodes), models=models,
             routing=routing, utilization=c.fleet_utilization(),
-            last_update=c.clock())
+            last_update=c.clock(), tenants=tuple(tenants))
 
     # ---- mutate -------------------------------------------------- #
     def deploy_model(self, demand: ModelDemand) -> DeployResult:
@@ -185,24 +217,54 @@ class AdminAPI:
                         target=min_replicas, removed=removed)
         return DeployResult(placed=0, unplaced=())
 
-    def drain_model(self, model: str, max_pump_steps: int = 10_000) -> int:
+    def drain_model(self, model: str, timeout_s: float = 30.0) -> int:
         """Stop admitting new requests for `model` (structured `DRAINING`
-        rejections) and pump the fleet until in-flight traffic settles.
-        Returns the number of requests still in flight (0 == drained).
-        The model stays drained until `resume_model` or
+        rejections) and wait until in-flight traffic settles — pump
+        threads drain it when the runtime is started, otherwise this call
+        hand-pumps.  Returns the number of requests still in flight
+        (0 == drained).  The model stays drained until `resume_model` or
         `undeploy_model`."""
         if self.gateway is None:
             raise RuntimeError("drain_model needs a Gateway-attached "
                                "AdminAPI (use gateway.admin)")
-        self.gateway._draining.add(model)
-        steps = 0
-        while self.gateway.inflight(model) > 0 and steps < max_pump_steps:
-            self.c.fleet.pump()
-            steps += 1
+        gw = self.gateway
+        gw._draining.add(model)
+        deadline = time.monotonic() + timeout_s
+        while gw.inflight(model) > 0 and time.monotonic() < deadline:
+            if gw.runtime_active:
+                time.sleep(0.005)
+            else:
+                self.c.fleet.pump()
         self.c.bus.emit("model_drained", model=model,
-                        remaining=self.gateway.inflight(model))
-        return self.gateway.inflight(model)
+                        remaining=gw.inflight(model))
+        return gw.inflight(model)
 
     def resume_model(self, model: str):
         if self.gateway is not None:
             self.gateway._draining.discard(model)
+
+    # ---- multi-tenancy ------------------------------------------- #
+    def set_tenant_quota(self, tenant: str,
+                         quota: Optional[TenantQuota] = None, *,
+                         requests_per_s: float = 0.0,
+                         tokens_per_s: float = 0.0) -> TenantQuota:
+        """Install per-tenant rate limits, enforced by the frontend at
+        admission (`ErrorCode.RATE_LIMITED` rejections).  Pass a
+        `TenantQuota` or the rate shorthands; quotas show up in
+        `FleetSnapshot.tenants`."""
+        if quota is None:
+            quota = TenantQuota(requests_per_s=requests_per_s,
+                                tokens_per_s=tokens_per_s)
+        self.c.frontend.tenants.set_quota(tenant, quota)
+        self.c.bus.emit("tenant_quota_set", tenant=tenant,
+                        requests_per_s=quota.requests_per_s,
+                        tokens_per_s=quota.tokens_per_s)
+        return quota
+
+    def remove_tenant_quota(self, tenant: str):
+        """Lift a tenant's rate limits (usage history is kept)."""
+        self.c.frontend.tenants.set_quota(tenant, None)
+        self.c.bus.emit("tenant_quota_removed", tenant=tenant)
+
+    def tenant_quotas(self) -> Dict[str, TenantQuota]:
+        return dict(self.c.frontend.tenants.quotas)

@@ -7,26 +7,34 @@ One `Gateway` fronts the whole fleet (the paper's "single logical unit"):
                         `.result()`, `.cancel()` and `.stream()` (a true
                         incremental token iterator driven by per-token
                         engine callbacks, surviving failover retries)
-* `generate_batch()`  — submit many, pump the fleet once for all of them
+* `generate_batch()`  — submit many, block until all settle
 * admission control   — per-model in-flight and backend queue-depth caps
-                        return structured 429-style `OVERLOADED` rejections
-                        instead of silently queuing
+                        return structured 429-style `OVERLOADED` rejections;
+                        per-tenant token buckets return `RATE_LIMITED`
 * `.admin`            — the typed control plane (`repro.api.admin.AdminAPI`)
+* `start()`/`stop()`  — the continuous serving runtime: background pump
+                        threads drive every node and a tick loop feeds
+                        load into the SDAI controller, so `submit()` is
+                        fire-and-forget and blocking calls wait on events
 
-The simulated fleet is hand-pumped: handles advance engines lazily via
-`Gateway._pump()` whenever a caller blocks on `result()`/`stream()`.  Each
-pump advances engines by one fused dispatch, so tokens surface in
-K-token quanta (`EngineConfig.decode_block`); streams still deliver every
-token as its own `StreamEvent`, and `cancel()` takes effect at the next
-dispatch boundary (the already-dispatched block is the last one emitted).
+Without `start()` the fleet is hand-pumped exactly as before: handles
+advance engines lazily via `Gateway._pump()` whenever a caller blocks.
+Either way blocking calls honor a *wall-clock* deadline
+(`GatewayConfig.default_timeout_s`, overridable per call) and surface
+`ErrorCode.TIMEOUT` — never a spurious pump-count failure.  Tokens surface
+in K-token quanta (`EngineConfig.decode_block`); `cancel()` takes effect at
+the next dispatch boundary.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 from collections import deque
 from typing import Deque, Dict, Iterator, List, Optional, Sequence, Union
 
 from repro.api.admin import AdminAPI
+from repro.api.runtime import RuntimeConfig, ServingRuntime
 from repro.api.types import (APIError, ErrorCode, GenerationRequest,
                              GenerationResponse, StreamEvent,
                              StreamEventType, response_from_internal)
@@ -41,8 +49,9 @@ class GatewayConfig:
     # admission control (None => unlimited, the seed behaviour)
     max_inflight_per_model: Optional[int] = None
     max_queue_depth_per_model: Optional[int] = None
-    # liveness: pump budget before a blocking wait times out
-    max_pump_steps: int = 10_000
+    # liveness: wall-clock budget for blocking waits (result / stream /
+    # generate_batch); per-call `timeout_s` overrides
+    default_timeout_s: float = 60.0
     # transparent re-route of a streaming request whose backend died
     # before emitting any token (after first token the failure surfaces
     # as a structured ERROR event instead — we never re-emit tokens)
@@ -55,20 +64,25 @@ class GatewayStats:
     completed: int = 0
     rejected_overloaded: int = 0
     rejected_draining: int = 0
+    rejected_rate_limited: int = 0
     cancelled: int = 0
     stream_retries: int = 0
     timeouts: int = 0
+    caller_pumps: int = 0      # hand-pump fallback iterations; stays 0
+                               # while the runtime drives the fleet
 
 
 class GenerationHandle:
     """Future for one in-flight generation.  Created by `Gateway.submit`;
-    never constructed directly."""
+    never constructed directly.  Thread-safe: pump threads append events
+    and signal `_cv`; the owning caller blocks on it."""
 
     def __init__(self, gateway: "Gateway", request: GenerationRequest):
         self._gw = gateway
         self.request = request
         self.internal: Optional[Request] = None   # current routing attempt
         self._events: Deque[StreamEvent] = deque()
+        self._cv = threading.Condition()
         self._emitted = 0          # tokens delivered to this handle
         self._retries_left = gateway.cfg.max_stream_retries
         self._admitted = False
@@ -88,9 +102,12 @@ class GenerationHandle:
     def _on_token(self, req: Request, tok: int):
         if req is not self.internal or self._done:
             return
-        self._events.append(StreamEvent(StreamEventType.TOKEN, token=tok,
-                                        index=self._emitted))
-        self._emitted += 1
+        with self._cv:
+            self._events.append(StreamEvent(StreamEventType.TOKEN,
+                                            token=tok,
+                                            index=self._emitted))
+            self._emitted += 1
+            self._cv.notify_all()
 
     def _on_finish(self, req: Request):
         if req is not self.internal or self._done:
@@ -100,7 +117,8 @@ class GenerationHandle:
             # backend died before the stream produced anything: re-route
             # transparently on a fresh internal request
             self._retries_left -= 1
-            self._gw.stats.stream_retries += 1
+            with self._gw._stats_lock:
+                self._gw.stats.stream_retries += 1
             retry = self._gw._make_internal(self.request, self)
             retry.retries = req.retries + 1
             self.internal = retry
@@ -113,20 +131,25 @@ class GenerationHandle:
         self._finalize(req)
 
     def _finalize(self, req: Request):
-        self._done = True
-        self._response = resp = response_from_internal(req)
-        if self._admitted:
-            self._gw._release(self.request.model)
-            self._admitted = False
-            self._gw.stats.completed += 1   # settled admitted requests
-                                            # only, not rejections
-        if resp.error is not None:
-            self._events.append(StreamEvent(StreamEventType.ERROR,
-                                            response=resp,
-                                            error=resp.error))
-        else:
-            self._events.append(StreamEvent(StreamEventType.FINISH,
-                                            response=resp))
+        with self._cv:
+            if self._done:
+                return
+            self._done = True
+            self._response = resp = response_from_internal(req)
+            if self._admitted:
+                self._gw._release(self.request.model)
+                self._admitted = False
+                with self._gw._stats_lock:      # settled admitted
+                    self._gw.stats.completed += 1   # requests only,
+                                                    # not rejections
+            if resp.error is not None:
+                self._events.append(StreamEvent(StreamEventType.ERROR,
+                                                response=resp,
+                                                error=resp.error))
+            else:
+                self._events.append(StreamEvent(StreamEventType.FINISH,
+                                                response=resp))
+            self._cv.notify_all()
 
     def _reject(self, error: APIError):
         """Admission rejection: finish immediately, never routed."""
@@ -134,33 +157,58 @@ class GenerationHandle:
         req.finish(error=error.message, code=error.code.value)
 
     # ------------------------------------------------------------- #
-    def stream(self) -> Iterator[StreamEvent]:
-        """Yield `StreamEvent`s incrementally, pumping the fleet between
-        deltas.  Always ends with exactly one terminal FINISH/ERROR."""
-        pumps = 0
+    def _deadline(self, timeout_s: Optional[float]) -> float:
+        t = timeout_s if timeout_s is not None \
+            else self._gw.cfg.default_timeout_s
+        return time.monotonic() + t
+
+    def _wait_for_progress(self, deadline: float):
+        """Block until an event may be available.  Runtime mode: wait on
+        the handle condition (pump threads signal it).  Hand-pump mode:
+        advance the fleet one iteration."""
+        if self._gw.runtime_active:
+            with self._cv:
+                if self._events or self._done:
+                    return
+                self._cv.wait(min(0.05,
+                                  max(1e-4, deadline - time.monotonic())))
+        else:
+            self._gw._pump()
+
+    def stream(self, timeout_s: Optional[float] = None
+               ) -> Iterator[StreamEvent]:
+        """Yield `StreamEvent`s incrementally; blocks between deltas (on
+        pump-thread signals with the runtime started, hand-pumping
+        otherwise).  Always ends with exactly one terminal FINISH/ERROR.
+        The wall-clock deadline spans the whole stream; on expiry the
+        request finishes with `ErrorCode.TIMEOUT`."""
+        deadline = self._deadline(timeout_s)
         while True:
-            while self._events:
-                ev = self._events.popleft()
+            while True:
+                with self._cv:
+                    if not self._events:
+                        break
+                    ev = self._events.popleft()
                 yield ev
                 if ev.terminal:
                     return
             if self._done:
                 return
-            if pumps >= self._gw.cfg.max_pump_steps:
+            if time.monotonic() >= deadline:
                 self._timeout()
                 continue
-            self._gw._pump()
-            pumps += 1
+            self._wait_for_progress(deadline)
 
-    def result(self) -> GenerationResponse:
-        """Block (pump the fleet) until this request completes."""
-        pumps = 0
+    def result(self, timeout_s: Optional[float] = None
+               ) -> GenerationResponse:
+        """Block until this request completes (or the wall-clock deadline
+        expires -> `ErrorCode.TIMEOUT`)."""
+        deadline = self._deadline(timeout_s)
         while not self._done:
-            if pumps >= self._gw.cfg.max_pump_steps:
+            if time.monotonic() >= deadline:
                 self._timeout()
                 break
-            self._gw._pump()
-            pumps += 1
+            self._wait_for_progress(deadline)
         return self._response
 
     def cancel(self) -> bool:
@@ -174,7 +222,8 @@ class GenerationHandle:
             if node is not None:
                 node.cancel(int(req.replica), req.request_id)
         req.cancelled = True
-        self._gw.stats.cancelled += 1
+        with self._gw._stats_lock:
+            self._gw.stats.cancelled += 1
         if req.finished_at is None:
             req.finish(error="cancelled by client", code=CODE_CANCELLED)
         else:                       # finished while suppressed? finalize
@@ -183,13 +232,17 @@ class GenerationHandle:
 
     def _timeout(self):
         req = self.internal
-        self._gw.stats.timeouts += 1
+        if self._done:
+            return
+        with self._gw._stats_lock:
+            self._gw.stats.timeouts += 1
         if req.node and req.replica:
             node = self._gw.c.fleet.nodes.get(req.node)
             if node is not None:
                 node.cancel(int(req.replica), req.request_id)
         if req.finished_at is None:
-            req.finish(error="pump budget exhausted", code=CODE_TIMEOUT)
+            req.finish(error="wall-clock deadline exceeded",
+                       code=CODE_TIMEOUT)
         elif not self._done:
             self._finalize(req)
 
@@ -203,8 +256,32 @@ class Gateway:
         self.cfg = cfg if cfg is not None else GatewayConfig()
         self.stats = GatewayStats()
         self.admin = AdminAPI(controller, gateway=self)
+        self.runtime: Optional[ServingRuntime] = None
         self._inflight: Dict[str, int] = {}
+        self._inflight_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
         self._draining: set = set()
+
+    # ---- continuous runtime lifecycle ----------------------------- #
+    @property
+    def runtime_active(self) -> bool:
+        return self.runtime is not None and self.runtime.running
+
+    def start(self, cfg: Optional[RuntimeConfig] = None) -> ServingRuntime:
+        """Start the continuous serving runtime: one pump thread per
+        node plus the controller tick loop.  Idempotent."""
+        if self.runtime_active:
+            return self.runtime
+        self.runtime = ServingRuntime(self, cfg)
+        return self.runtime.start()
+
+    def stop(self, drain: bool = True,
+             timeout_s: Optional[float] = None) -> bool:
+        """Stop the runtime, draining in-flight work by default.
+        Returns True when every runtime thread joined."""
+        if self.runtime is None:
+            return True
+        return self.runtime.stop(drain=drain, timeout_s=timeout_s)
 
     # ------------------------------------------------------------- #
     def models(self) -> List[str]:
@@ -216,12 +293,17 @@ class Gateway:
 
     # ------------------------------------------------------------- #
     def _pump(self):
+        """Hand-pump fallback (runtime not started): advance the whole
+        fleet one iteration from the calling thread."""
+        with self._stats_lock:
+            self.stats.caller_pumps += 1
         self.c.fleet.pump()
 
     def _release(self, model: str):
-        n = self._inflight.get(model, 0)
-        if n > 0:
-            self._inflight[model] = n - 1
+        with self._inflight_lock:
+            n = self._inflight.get(model, 0)
+            if n > 0:
+                self._inflight[model] = n - 1
 
     def _queue_depth(self, model: str) -> int:
         """Aggregate scheduler backlog across the model's live replicas."""
@@ -269,89 +351,115 @@ class Gateway:
                 f"context {ctx} of model {greq.model!r}")
         return None
 
-    def _admission_error(self, model: str) -> Optional[APIError]:
-        if model in self._draining:
-            return APIError(ErrorCode.DRAINING,
-                            f"model {model!r} is draining")
-        lim = self.cfg.max_inflight_per_model
-        if lim is not None and self._inflight.get(model, 0) >= lim:
-            return APIError(
-                ErrorCode.OVERLOADED,
-                f"model {model!r} at max in-flight ({lim})")
-        qlim = self.cfg.max_queue_depth_per_model
-        if qlim is not None and self._queue_depth(model) >= qlim:
-            return APIError(
-                ErrorCode.OVERLOADED,
-                f"model {model!r} backend queue depth >= {qlim}")
-        return None
+    def _try_admit(self, greq: GenerationRequest) -> Optional[APIError]:
+        """Atomically run every admission gate and, on success, claim the
+        in-flight slot.  Capacity checks come first so a fleet-rejected
+        request never drains the tenant's token bucket; the bucket charge
+        is last because it is the one check with a side effect."""
+        model = greq.model
+        with self._inflight_lock:
+            if model in self._draining:
+                return APIError(ErrorCode.DRAINING,
+                                f"model {model!r} is draining")
+            lim = self.cfg.max_inflight_per_model
+            if lim is not None and self._inflight.get(model, 0) >= lim:
+                return APIError(
+                    ErrorCode.OVERLOADED,
+                    f"model {model!r} at max in-flight ({lim})")
+            qlim = self.cfg.max_queue_depth_per_model
+            if qlim is not None and self._queue_depth(model) >= qlim:
+                return APIError(
+                    ErrorCode.OVERLOADED,
+                    f"model {model!r} backend queue depth >= {qlim}")
+            # per-tenant token buckets (frontend-owned, AdminAPI-config)
+            reason = self.c.frontend.tenants.admit(
+                greq.tenant, greq.sampling.max_tokens)
+            if reason is not None:
+                return APIError(ErrorCode.RATE_LIMITED, reason)
+            self._inflight[model] = self._inflight.get(model, 0) + 1
+            return None
 
     def _make_internal(self, greq: GenerationRequest,
                        handle: GenerationHandle) -> Request:
         return Request(model=greq.model, prompt=list(greq.prompt),
-                       sampling=greq.sampling,
+                       sampling=greq.sampling, tenant=greq.tenant,
                        on_token=handle._on_token,
                        on_finish=handle._on_finish)
 
     # ------------------------------------------------------------- #
     def submit(self, model: Union[str, GenerationRequest],
                prompt: Optional[Sequence[int]] = None,
-               sampling: Optional[SamplingParams] = None
-               ) -> GenerationHandle:
+               sampling: Optional[SamplingParams] = None,
+               tenant: str = "") -> GenerationHandle:
         """Route one request; returns immediately with an async handle.
         Admission-control rejections come back as an already-finished
-        handle whose response carries `ErrorCode.OVERLOADED`/`DRAINING`."""
+        handle whose response carries `ErrorCode.OVERLOADED`/`DRAINING`/
+        `RATE_LIMITED`."""
         if isinstance(model, GenerationRequest):
             greq = model
         else:
             greq = GenerationRequest(model=model, prompt=tuple(prompt),
-                                     sampling=sampling or SamplingParams())
+                                     sampling=sampling or SamplingParams(),
+                                     tenant=tenant)
         handle = GenerationHandle(self, greq)
         handle.internal = self._make_internal(greq, handle)
-        self.stats.submitted += 1
+        with self._stats_lock:
+            self.stats.submitted += 1
         err = self._validation_error(greq)
         if err is not None:
             handle._reject(err)
             return handle
-        err = self._admission_error(greq.model)
+        err = self._try_admit(greq)    # claims the in-flight slot on None
         if err is not None:
-            if err.code is ErrorCode.DRAINING:
-                self.stats.rejected_draining += 1
-            else:
-                self.stats.rejected_overloaded += 1
+            with self._stats_lock:
+                if err.code is ErrorCode.DRAINING:
+                    self.stats.rejected_draining += 1
+                elif err.code is ErrorCode.RATE_LIMITED:
+                    self.stats.rejected_rate_limited += 1
+                else:
+                    self.stats.rejected_overloaded += 1
             handle._reject(err)
             return handle
         handle._admitted = True
-        self._inflight[greq.model] = self._inflight.get(greq.model, 0) + 1
         self.c.frontend.submit(handle.internal)
         return handle
 
     def generate(self, model: Union[str, GenerationRequest],
                  prompt: Optional[Sequence[int]] = None,
-                 sampling: Optional[SamplingParams] = None
-                 ) -> GenerationResponse:
-        """Blocking generate: submit and drive the fleet to completion."""
-        return self.submit(model, prompt, sampling).result()
+                 sampling: Optional[SamplingParams] = None,
+                 tenant: str = "",
+                 timeout_s: Optional[float] = None) -> GenerationResponse:
+        """Blocking generate: submit and wait for completion (pump
+        threads drive the fleet when the runtime is started; otherwise
+        this call hand-pumps)."""
+        return self.submit(model, prompt, sampling,
+                           tenant=tenant).result(timeout_s)
 
-    def generate_batch(self, requests: Sequence[GenerationRequest]
+    def generate_batch(self, requests: Sequence[GenerationRequest],
+                       timeout_s: Optional[float] = None
                        ) -> List[GenerationResponse]:
-        """Submit a batch, then pump the whole fleet until every request
-        settles — replicas decode concurrently (continuous batching
-        across the fleet, not sequential per-request pumping)."""
+        """Submit a batch, then block until every request settles —
+        replicas decode concurrently (continuous batching across the
+        fleet).  One wall-clock deadline covers the whole batch."""
         handles = [self.submit(r) for r in requests]
-        pumps = 0
-        while any(not h.done for h in handles):
-            if pumps >= self.cfg.max_pump_steps:
-                for h in handles:
-                    if not h.done:
-                        h._timeout()
-                break
-            self._pump()
-            pumps += 1
+        deadline = time.monotonic() + (
+            timeout_s if timeout_s is not None
+            else self.cfg.default_timeout_s)
+        for h in handles:
+            while not h.done:
+                if time.monotonic() >= deadline:
+                    for lh in handles:
+                        if not lh.done:
+                            lh._timeout()
+                    break
+                h._wait_for_progress(deadline)
         return [h.response for h in handles]
 
     def stream(self, model: Union[str, GenerationRequest],
                prompt: Optional[Sequence[int]] = None,
-               sampling: Optional[SamplingParams] = None
-               ) -> Iterator[StreamEvent]:
+               sampling: Optional[SamplingParams] = None,
+               tenant: str = "",
+               timeout_s: Optional[float] = None) -> Iterator[StreamEvent]:
         """Convenience: submit + stream in one call."""
-        return self.submit(model, prompt, sampling).stream()
+        return self.submit(model, prompt, sampling,
+                           tenant=tenant).stream(timeout_s)

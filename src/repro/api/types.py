@@ -30,11 +30,13 @@ class ErrorCode(enum.Enum):
     TIMEOUT = "timeout"                # 504: pump budget exhausted
     DRAINING = "draining"              # 503: model is being drained
     INVALID_REQUEST = "invalid_request"  # 400: malformed request
+    RATE_LIMITED = "rate_limited"      # 429: tenant token bucket empty
 
     @property
     def retryable(self) -> bool:
         return self in (ErrorCode.NO_BACKEND, ErrorCode.OVERLOADED,
-                        ErrorCode.TIMEOUT, ErrorCode.DRAINING)
+                        ErrorCode.TIMEOUT, ErrorCode.DRAINING,
+                        ErrorCode.RATE_LIMITED)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,10 +59,13 @@ class GatewayError(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class GenerationRequest:
-    """One immutable generation call against the unified endpoint."""
+    """One immutable generation call against the unified endpoint.
+    `tenant` identifies the caller for per-tenant rate limiting and
+    accounting; "" is the unlimited anonymous tenant."""
     model: str
     prompt: Tuple[int, ...]
     sampling: SamplingParams = SamplingParams()   # frozen -> safe default
+    tenant: str = ""
 
     def __post_init__(self):
         object.__setattr__(self, "prompt", tuple(self.prompt))

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 import time
 from typing import Dict, List, Optional
 
@@ -19,7 +20,7 @@ import jax
 from repro.cluster.hardware import (NodeClass, NODE_CLASSES,
                                     RUNTIME_RESERVE_FRACTION)
 from repro.configs.base import ArchConfig, BYTES
-from repro.serving.engine import InferenceEngine, EngineConfig
+from repro.serving.engine import EngineFailure, InferenceEngine, EngineConfig
 from repro.serving.request import CODE_ENGINE_FAILED, Request
 
 _inst_ids = itertools.count()
@@ -73,6 +74,14 @@ class BackendNode:
         self._alive = True
         self._seed = seed
         self.last_heartbeat = time.monotonic()
+        # `lock` serializes engine mutation (step / cancel / fail /
+        # deploy); `work_cv` is a *separate* light lock so submitters can
+        # wake this node's pump thread without contending on a running
+        # step — and, crucially, so a pump thread that re-routes a dying
+        # request to another node mid-step never waits on that node's big
+        # lock (no lock-ordering cycle between nodes).
+        self.lock = threading.RLock()
+        self.work_cv = threading.Condition(threading.Lock())
 
     # ------------------------------------------------------------- #
     @property
@@ -149,14 +158,21 @@ class BackendNode:
                                  decode_block=decode_block))
         inst = Instance(next(_inst_ids), cfg.name, cfg, quantize, n_slots,
                         max_len, need, engine)
-        self.instances[inst.instance_id] = inst
+        with self.lock:
+            self.instances[inst.instance_id] = inst
         return inst
 
     def undeploy(self, instance_id: int):
-        self.instances.pop(instance_id, None)
+        with self.lock:
+            self.instances.pop(instance_id, None)
 
     # ------------------------------------------------------------- #
     def submit(self, instance_id: int, req: Request) -> bool:
+        """Enqueue a request on one of this node's engines.  Deliberately
+        lock-free on `self.lock`: real-engine submits only touch the
+        engine's internally-locked scheduler queue, so a pump thread
+        re-routing a request here mid-step can never deadlock across
+        nodes.  Wakes this node's pump thread on success."""
         if not self._alive:
             req.finish(error=f"node {self.node_id} down",
                        code=CODE_ENGINE_FAILED)
@@ -168,7 +184,10 @@ class BackendNode:
         req.node = self.node_id
         req.replica = str(instance_id)
         if inst.engine:
-            return inst.engine.submit(req)
+            ok = inst.engine.submit(req)
+            if ok:
+                self.notify_work()
+            return ok
         # accounted mode: synthetic tokens through the same emit/finish
         # streaming path as real engines, honoring sampling.max_tokens
         inst.sim_active += 1
@@ -182,33 +201,61 @@ class BackendNode:
         return True
 
     def cancel(self, instance_id: int, request_id: int) -> bool:
-        """Abort a request on one of this node's engines (frees its slot)."""
+        """Abort a request on one of this node's engines (frees its slot).
+        Takes the node lock: cancellation rewrites per-slot device state
+        and must not interleave with a fused-decode step."""
         inst = self.instances.get(instance_id)
         if inst is None or inst.engine is None:
             return False
-        return inst.engine.cancel(request_id)
+        with self.lock:
+            return inst.engine.cancel(request_id)
 
-    def pump(self, max_steps: int = 1):
-        """Advance all engines (the node's serving loop)."""
+    # ------------------------------------------------------------- #
+    def has_work(self) -> bool:
+        """Any engine with active slots or queued requests."""
         if not self._alive:
-            return
-        for inst in self.instances.values():
-            if inst.engine and inst.engine.alive:
-                for _ in range(max_steps):
-                    if inst.engine.slot_req or inst.engine.scheduler.depth:
-                        inst.engine.step()
+            return False
+        return any(inst.engine is not None and inst.engine.alive
+                   and (inst.engine.slot_req or inst.engine.scheduler.depth)
+                   for inst in list(self.instances.values()))
+
+    def notify_work(self):
+        """Wake this node's pump thread (no-op without a runtime)."""
+        with self.work_cv:
+            self.work_cv.notify_all()
+
+    def pump(self, max_steps: int = 1) -> int:
+        """Advance all engines (the node's serving loop).  Returns decode
+        tokens emitted, so pump loops can tell progress from idling."""
+        if not self._alive:
+            return 0
+        emitted = 0
+        with self.lock:
+            for inst in list(self.instances.values()):
+                if inst.engine and inst.engine.alive:
+                    for _ in range(max_steps):
+                        if inst.engine.slot_req or \
+                                inst.engine.scheduler.depth:
+                            try:
+                                emitted += inst.engine.step()
+                            except EngineFailure:
+                                break    # failed under us mid-loop
+        return emitted
 
     # ------------------------------------------------------------- #
     def fail(self):
         """Node-level outage (power/network loss)."""
         self._alive = False
-        for inst in self.instances.values():
-            if inst.engine:
-                inst.engine.fail()
+        with self.lock:
+            for inst in list(self.instances.values()):
+                if inst.engine:
+                    inst.engine.fail()
+        self.notify_work()         # unblock the pump thread promptly
 
     def recover(self):
         """Node returns empty — models must be re-placed by the
         controller (the Ollama re-pull analogue)."""
-        self._alive = True
-        self.instances.clear()
+        with self.lock:
+            self._alive = True
+            self.instances.clear()
         self.last_heartbeat = time.monotonic()

@@ -1,11 +1,13 @@
 """The paper's primary contribution: the Software-Defined AI (SDAI) control
 plane — controller, VRAM-aware placement, HAProxy-style frontend, health
 monitoring, configuration wizard, unified client."""
-from repro.core.controller import SDAIController, ControllerConfig
+from repro.core.controller import (SDAIController, ControllerConfig,
+                                   AutoscaleConfig, ModelLoad)
 from repro.core.placement import (ModelDemand, Assignment, PlacementPlan,
                                   place, place_naive, reallocation_plan,
                                   plan_utilization)
-from repro.core.frontend import ServiceFrontend, FrontendConfig
+from repro.core.frontend import (ServiceFrontend, FrontendConfig,
+                                 TenantLimiter, TenantQuota, TenantUsage)
 from repro.core.health import HealthMonitor, HealthConfig, NodeHealth
 from repro.core.registry import (ModelCatalog, NodeRegistry,
                                  ReplicaRegistry, ReplicaKey, ReplicaInfo)
@@ -14,10 +16,12 @@ from repro.core.wizard import (ConfigWizard, WizardConfig, WizardSelection,
 from repro.core.client import Client
 from repro.core.events import EventBus, Event
 
-__all__ = ["SDAIController", "ControllerConfig", "ModelDemand",
+__all__ = ["SDAIController", "ControllerConfig", "AutoscaleConfig",
+           "ModelLoad", "ModelDemand",
            "Assignment", "PlacementPlan", "place", "place_naive",
            "reallocation_plan", "plan_utilization", "ServiceFrontend",
-           "FrontendConfig", "HealthMonitor", "HealthConfig", "NodeHealth",
+           "FrontendConfig", "TenantLimiter", "TenantQuota", "TenantUsage",
+           "HealthMonitor", "HealthConfig", "NodeHealth",
            "ModelCatalog", "NodeRegistry", "ReplicaRegistry", "ReplicaKey",
            "ReplicaInfo", "ConfigWizard", "WizardConfig", "WizardSelection",
            "WizardModelChoice", "Client", "EventBus", "Event"]

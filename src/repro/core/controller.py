@@ -27,12 +27,40 @@ from repro.core.registry import (ModelCatalog, NodeRegistry, ReplicaInfo,
 
 
 @dataclasses.dataclass
+class AutoscaleConfig:
+    """Load-feedback scale-up policy (paper: reallocation under workload
+    fluctuations).  A model is "hot" when its backlog-per-replica exceeds
+    `queue_high` OR its oldest queued request has waited longer than
+    `head_wait_high_s` (a shallow-but-stale queue is still starvation);
+    `sustain_ticks` consecutive hot ticks place one more replica into
+    free VRAM, then `cooldown_ticks` of hysteresis before the next
+    growth step."""
+    enabled: bool = True
+    queue_high: float = 2.0        # queued requests per healthy replica
+    head_wait_high_s: float = 2.0  # oldest-queued-request age threshold
+    sustain_ticks: int = 3
+    cooldown_ticks: int = 10
+
+
+@dataclasses.dataclass
+class ModelLoad:
+    """One model's instantaneous pressure signal, fed into `tick()` by
+    the serving runtime (or a test harness)."""
+    queue_depth: int = 0           # scheduler backlog across replicas
+    inflight: int = 0              # gateway-admitted, not yet settled
+    replicas: int = 0              # healthy replicas serving the model
+    max_head_wait_s: float = 0.0   # oldest queued request, any replica
+
+
+@dataclasses.dataclass
 class ControllerConfig:
     real_param_threshold: int = 5_000_000   # params; above => accounted mode
     health: HealthConfig = dataclasses.field(default_factory=HealthConfig)
     frontend: FrontendConfig = dataclasses.field(
         default_factory=FrontendConfig)
     fill_vram: bool = True
+    autoscale: AutoscaleConfig = dataclasses.field(
+        default_factory=AutoscaleConfig)
 
 
 class SDAIController:
@@ -51,6 +79,11 @@ class SDAIController:
                                         self.cfg.frontend)
         self.demands: Dict[str, ModelDemand] = {}
         self._dead_nodes: set = set()
+        # load-feedback autoscale state: model -> consecutive hot ticks /
+        # remaining cooldown ticks
+        self._pressure_streak: Dict[str, int] = {}
+        self._scale_cooldown: Dict[str, int] = {}
+        self.scale_ups = 0
 
     # ---------------------------------------------------------------- #
     # Discovery phase (paper: "Upon startup, it discovers and establishes
@@ -119,9 +152,13 @@ class SDAIController:
 
     # ---------------------------------------------------------------- #
     # Monitoring / dynamic reallocation loop
-    def tick(self):
+    def tick(self, load: Optional[Dict[str, ModelLoad]] = None):
+        """One control-loop iteration.  `load` (optional) carries the
+        per-model pressure signal — queue depth and in-flight count — the
+        serving runtime measures each tick; sustained pressure triggers
+        scale-up into free VRAM (`AutoscaleConfig`)."""
         # 1. heartbeats
-        for node in self.fleet.nodes.values():
+        for node in list(self.fleet.nodes.values()):
             hb = node.heartbeat()
             if hb is not None:
                 self.monitor.observe_heartbeat(node.node_id, hb["ts"])
@@ -133,7 +170,7 @@ class SDAIController:
             if down and nid not in self._dead_nodes:
                 self._handle_node_death(nid)
         # 3. elastic join: nodes present in fleet but not registered
-        for nid, node in self.fleet.nodes.items():
+        for nid, node in list(self.fleet.nodes.items()):
             if node.alive and nid not in self.nodes.payloads:
                 self.nodes.register(node.discovery_payload())
                 self.monitor.observe_heartbeat(nid)
@@ -147,6 +184,52 @@ class SDAIController:
                 self.nodes.register(node.discovery_payload())
                 self.bus.emit("node_recovered", node=nid)
                 self._rebalance_into(nid)
+        # 4. load feedback -> scale-up under sustained pressure
+        if load:
+            self._observe_load(load)
+
+    # ---------------------------------------------------------------- #
+    def _observe_load(self, load: Dict[str, ModelLoad]):
+        acfg = self.cfg.autoscale
+        if not acfg.enabled:
+            return
+        for model, ml in load.items():
+            cd = self._scale_cooldown.get(model, 0)
+            if cd > 0:
+                self._scale_cooldown[model] = cd - 1
+                continue
+            replicas = max(ml.replicas, 1)
+            hot = (ml.queue_depth / replicas >= acfg.queue_high
+                   or ml.max_head_wait_s >= acfg.head_wait_high_s)
+            streak = self._pressure_streak.get(model, 0) + 1 if hot else 0
+            self._pressure_streak[model] = streak
+            if streak >= acfg.sustain_ticks:
+                self._pressure_streak[model] = 0
+                if self.scale_up(model):
+                    self._scale_cooldown[model] = acfg.cooldown_ticks
+
+    def scale_up(self, model: str) -> bool:
+        """Place one additional replica of `model` into free VRAM (bounded
+        by the demand's replica cap).  Returns True when a replica was
+        actually deployed."""
+        if model not in self.catalog:
+            return False
+        demand = self.demands.get(model)
+        if demand is None:
+            demand = ModelDemand(self.catalog.get(model), min_replicas=1)
+        have = len(self.replicas.for_model(model))
+        if have >= demand.replica_cap:
+            return False
+        delta = dataclasses.replace(demand, min_replicas=1, max_replicas=1)
+        plan = place(self._free_capacity(), [delta], fill=False)
+        keys = self._execute(plan)
+        if not keys:
+            return False           # no node has room: pressure persists
+        self.scale_ups += 1
+        self.bus.emit("autoscaled_up", model=model,
+                      replicas=have + len(keys),
+                      placed=[str(k) for k in keys])
+        return True
 
     def _handle_node_death(self, nid: str):
         self._dead_nodes.add(nid)
@@ -193,10 +276,11 @@ class SDAIController:
         for info in self.replicas.for_model(model)[keep:]:
             node = self.fleet.nodes.get(info.key.node_id)
             if node is not None:
-                inst = node.instances.get(info.key.instance_id)
-                if inst is not None and inst.engine is not None:
-                    inst.engine.fail()
-                node.undeploy(info.key.instance_id)
+                with node.lock:       # don't fail an engine mid-step
+                    inst = node.instances.get(info.key.instance_id)
+                    if inst is not None and inst.engine is not None:
+                        inst.engine.fail()
+                    node.undeploy(info.key.instance_id)
             self.replicas.remove(info.key)
             removed += 1
         return removed

@@ -5,12 +5,19 @@ retries and transparent failover.  Every backend node also gets a
 `NodeProxy` view (the paper runs HAProxy *on each node* so multiple replicas
 of one model can live on one node or across nodes); the frontend composes
 them into one logical endpoint per model — the unified client interface.
+
+Multi-tenancy lives here too: per-tenant token buckets (`TenantQuota`)
+rate-limit requests/s and generated-tokens/s at admission, so one tenant's
+burst degrades into structured `RATE_LIMITED` rejections instead of eating
+the whole fleet's slots.  Buckets are thread-safe — with the
+`ServingRuntime` started, callers admit from arbitrary threads.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.cluster.fleet import Fleet
 from repro.core.health import HealthMonitor, NodeHealth
@@ -35,6 +42,123 @@ class FrontendStats:
     per_replica: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
+# ------------------------------------------------------------------ #
+@dataclasses.dataclass(frozen=True)
+class TenantQuota:
+    """Per-tenant rate limits.  0 disables that dimension.  Bursts
+    default to one second's worth of rate (min 1), so a quota of
+    5 req/s admits 5 back-to-back then refills continuously."""
+    requests_per_s: float = 0.0
+    tokens_per_s: float = 0.0
+    burst_requests: float = 0.0
+    burst_tokens: float = 0.0
+
+    def request_burst(self) -> float:
+        return self.burst_requests or max(self.requests_per_s, 1.0)
+
+    def token_burst(self) -> float:
+        return self.burst_tokens or max(self.tokens_per_s, 1.0)
+
+
+@dataclasses.dataclass
+class TenantUsage:
+    admitted: int = 0
+    rate_limited: int = 0
+    tokens_charged: int = 0
+
+
+class _TokenBucket:
+    """Classic leaky/token bucket: `rate` units/s refill up to `burst`."""
+
+    def __init__(self, rate: float, burst: float,
+                 clock: Callable[[], float]):
+        self.rate = rate
+        self.burst = burst
+        self.clock = clock
+        self.level = burst
+        self._last = clock()
+
+    def _refill(self):
+        now = self.clock()
+        self.level = min(self.burst,
+                         self.level + (now - self._last) * self.rate)
+        self._last = now
+
+    def try_take(self, n: float) -> bool:
+        self._refill()
+        if self.level >= n:
+            self.level -= n
+            return True
+        return False
+
+
+class TenantLimiter:
+    """Thread-safe registry of per-tenant request/token buckets."""
+
+    def __init__(self, clock: Callable[[], float] = time.monotonic):
+        self.clock = clock
+        self.quotas: Dict[str, TenantQuota] = {}
+        self.usage: Dict[str, TenantUsage] = {}
+        self._req_buckets: Dict[str, _TokenBucket] = {}
+        self._tok_buckets: Dict[str, _TokenBucket] = {}
+        self._lock = threading.Lock()
+
+    def set_quota(self, tenant: str, quota: Optional[TenantQuota]):
+        """Install (or, with None, remove) a tenant's rate limits.
+        Resets the tenant's buckets to a full burst."""
+        with self._lock:
+            self._req_buckets.pop(tenant, None)
+            self._tok_buckets.pop(tenant, None)
+            if quota is None:
+                self.quotas.pop(tenant, None)
+                return
+            self.quotas[tenant] = quota
+            if quota.requests_per_s > 0:
+                self._req_buckets[tenant] = _TokenBucket(
+                    quota.requests_per_s, quota.request_burst(), self.clock)
+            if quota.tokens_per_s > 0:
+                self._tok_buckets[tenant] = _TokenBucket(
+                    quota.tokens_per_s, quota.token_burst(), self.clock)
+
+    def admit(self, tenant: str, projected_tokens: int) -> Optional[str]:
+        """Charge one request + its projected token budget against the
+        tenant's buckets.  Returns None when admitted, else a human
+        reason (the caller maps it to `RATE_LIMITED`).  Tenants without
+        an installed quota (including the anonymous "") are unlimited
+        and untracked — usage state stays bounded by the number of
+        configured quotas, not by caller-supplied tenant strings."""
+        with self._lock:
+            if tenant not in self.quotas:
+                return None
+            usage = self.usage.setdefault(tenant, TenantUsage())
+            rb = self._req_buckets.get(tenant)
+            tb = self._tok_buckets.get(tenant)
+            if rb is not None and not rb.try_take(1.0):
+                usage.rate_limited += 1
+                return (f"tenant {tenant!r} over request rate "
+                        f"({self.quotas[tenant].requests_per_s:g} req/s)")
+            if tb is not None and \
+                    not tb.try_take(float(projected_tokens)):
+                if rb is not None:      # roll back the request charge
+                    rb.level = min(rb.burst, rb.level + 1.0)
+                usage.rate_limited += 1
+                return (f"tenant {tenant!r} over token rate "
+                        f"({self.quotas[tenant].tokens_per_s:g} tok/s)")
+            usage.admitted += 1
+            usage.tokens_charged += projected_tokens
+            return None
+
+    def snapshot(self) -> Dict[str, Dict]:
+        """tenant -> {quota, usage} for the admin surface."""
+        with self._lock:
+            out = {}
+            for tenant in set(self.quotas) | set(self.usage):
+                q = self.quotas.get(tenant)
+                u = self.usage.get(tenant, TenantUsage())
+                out[tenant] = {"quota": q, "usage": dataclasses.replace(u)}
+            return out
+
+
 class ServiceFrontend:
     def __init__(self, fleet: Fleet, replicas: ReplicaRegistry,
                  monitor: HealthMonitor,
@@ -44,6 +168,7 @@ class ServiceFrontend:
         self.monitor = monitor
         self.cfg = cfg if cfg is not None else FrontendConfig()
         self.stats = FrontendStats()
+        self.tenants = TenantLimiter()
         self._last_pick: Dict[str, int] = {}
         self._pick_seq = 0
 

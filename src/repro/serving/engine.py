@@ -267,9 +267,12 @@ class InferenceEngine:
     def fail(self):
         """Failure injection: node/instance crash."""
         self._dead = True
-        doomed = list(self.slot_req.values()) + list(self.scheduler.queue)
+        doomed = list(self.slot_req.values())
         self.slot_req.clear()
-        self.scheduler.queue.clear()
+        # close-and-drain is atomic: a concurrently racing submit either
+        # landed in the queue (doomed below) or is rejected by the closed
+        # scheduler with ENGINE_FAILED — the frontend fails it over
+        doomed += self.scheduler.close()
         for req in doomed:
             req.finish(error="engine crashed", code=CODE_ENGINE_FAILED)
 
@@ -455,4 +458,7 @@ class InferenceEngine:
             "prefill_traces": self.prefill_traces,
             "decode_traces": self.decode_traces,
             "decode_block": self.ecfg.decode_block,
+            "queue_enqueued": self.scheduler.enqueued_total,
+            "queue_dequeued": self.scheduler.dequeued_total,
+            "queue_rejected": self.scheduler.rejected,
         }

@@ -41,6 +41,7 @@ CODE_ENGINE_FAILED = "engine_failed"
 CODE_CANCELLED = "cancelled"
 CODE_TIMEOUT = "timeout"
 CODE_INVALID_REQUEST = "invalid_request"
+CODE_RATE_LIMITED = "rate_limited"
 
 
 @dataclasses.dataclass
@@ -49,6 +50,7 @@ class Request:
     prompt: List[int]                         # token ids
     sampling: SamplingParams = dataclasses.field(
         default_factory=SamplingParams)
+    tenant: str = ""                          # multi-tenant accounting key
     request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
     state: RequestState = RequestState.QUEUED
     output: List[int] = dataclasses.field(default_factory=list)

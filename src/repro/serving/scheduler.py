@@ -6,16 +6,23 @@ batched decode over all active slots.  Admission is *bucket-aware*: the
 engine pads prompts to power-of-two length buckets so one jitted prefill
 serves every length in a bucket, and the scheduler hands it a same-bucket
 batch (FCFS head plus any later queued requests that share the head's
-bucket) so the whole batch lands in a single dispatch.  Tracks queue
-metrics the SDAI controller uses for load-based reallocation decisions.
+bucket) so the whole batch lands in a single dispatch.
+
+The queue is guarded by a lock: with the `ServingRuntime` started, callers
+submit from arbitrary threads while each node's pump thread dequeues.
+Tracks queue metrics (depth, total enqueued, head wait) the SDAI
+controller's load-feedback tick uses for rebalancing decisions.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 from collections import deque
 from typing import Callable, Deque, List, Optional
 
-from repro.serving.request import CODE_OVERLOADED, Request, RequestState
+from repro.serving.request import (CODE_ENGINE_FAILED, CODE_OVERLOADED,
+                                   Request, RequestState)
 
 
 @dataclasses.dataclass
@@ -29,22 +36,49 @@ class Scheduler:
         self.cfg = cfg if cfg is not None else SchedulerConfig()
         self.queue: Deque[Request] = deque()
         self.rejected = 0
+        self.enqueued_total = 0
+        self.dequeued_total = 0
+        self.closed = False
+        self._lock = threading.Lock()
 
     def submit(self, req: Request) -> bool:
-        if len(self.queue) >= self.cfg.max_queue:
-            self.rejected += 1
-            req.finish(error="queue full", code=CODE_OVERLOADED)
+        with self._lock:
+            # closed is checked under the same lock close()+drain() hold,
+            # so a submit racing an engine failure either lands in the
+            # queue before the drain (and is finished by it) or is
+            # rejected here — never stranded in a dead engine's queue
+            if self.closed:
+                error, code = "engine closed", CODE_ENGINE_FAILED
+            elif len(self.queue) >= self.cfg.max_queue:
+                self.rejected += 1
+                error, code = "queue full", CODE_OVERLOADED
+            else:
+                req.state = RequestState.QUEUED
+                self.queue.append(req)
+                self.enqueued_total += 1
+                error = code = ""
+        if error:
+            # finish outside the lock: callbacks may re-route the request
+            req.finish(error=error, code=code)
             return False
-        req.state = RequestState.QUEUED
-        self.queue.append(req)
         return True
 
     def cancel(self, request_id: int) -> bool:
-        for req in self.queue:
-            if req.request_id == request_id:
-                self.queue.remove(req)
-                return True
+        with self._lock:
+            for req in self.queue:
+                if req.request_id == request_id:
+                    self.queue.remove(req)
+                    return True
         return False
+
+    def close(self) -> List[Request]:
+        """Engine failure path: atomically stop accepting submits and
+        hand back everything queued so the caller can fail it."""
+        with self._lock:
+            self.closed = True
+            out = list(self.queue)
+            self.queue.clear()
+        return out
 
     def next_prefill_bucket(self, free_slots: int,
                             bucket_of: Callable[[int], int]
@@ -54,22 +88,34 @@ class Scheduler:
         the engine prefills them together in one jitted call.  The head is
         always admitted (no starvation); requests from other buckets keep
         their relative order for the next step."""
-        n = min(free_slots, self.cfg.max_prefill_per_step, len(self.queue))
-        if n <= 0:
-            return []
-        head = self.queue.popleft()
-        out = [head]
-        if n > 1:
-            hb = bucket_of(len(head.prompt))
-            rest: List[Request] = []
-            for req in self.queue:
-                if len(out) < n and bucket_of(len(req.prompt)) == hb:
-                    out.append(req)
-                else:
-                    rest.append(req)
-            self.queue = deque(rest)
-        return out
+        with self._lock:
+            n = min(free_slots, self.cfg.max_prefill_per_step,
+                    len(self.queue))
+            if n <= 0:
+                return []
+            head = self.queue.popleft()
+            out = [head]
+            if n > 1:
+                hb = bucket_of(len(head.prompt))
+                rest: List[Request] = []
+                for req in self.queue:
+                    if len(out) < n and bucket_of(len(req.prompt)) == hb:
+                        out.append(req)
+                    else:
+                        rest.append(req)
+                self.queue = deque(rest)
+            self.dequeued_total += len(out)
+            return out
 
     @property
     def depth(self) -> int:
         return len(self.queue)
+
+    def head_wait_s(self, now: Optional[float] = None) -> float:
+        """Age of the oldest queued request — the controller's pressure
+        signal (a deep-but-draining queue is fine; a stale head is not)."""
+        with self._lock:
+            if not self.queue:
+                return 0.0
+            t = time.monotonic() if now is None else now
+            return max(0.0, t - self.queue[0].created_at)
