@@ -1,11 +1,13 @@
 """Live serving throughput/latency on CPU (tiny model) through Gateway API
-v1, plus two studies:
+v1, plus three studies:
 
 * device-resident hot path — fused K-step decode vs single-step dispatch
   (dispatches/token, host syncs/token, tok/s, p50/p95 step time),
 * continuous runtime — >= 4 concurrent tenants across >= 2 nodes driven
   entirely by background pump threads (zero caller-side pumps), with
-  per-tenant token-bucket rejections and load-driven controller scale-up.
+  per-tenant token-bucket rejections and load-driven controller scale-up,
+* http wire — requests/s and p95 TTFT through the OpenAI-compatible
+  socket service vs the in-process Gateway (informational).
 
 Writes ``BENCH_serving.json``; CI gates ``dispatches_per_token`` /
 ``host_syncs_per_token`` against ``benchmarks/baseline_serving.json``
@@ -208,6 +210,103 @@ def _runtime_study(n_tenants: int = 4, n_nodes: int = 2,
     }
 
 
+def _http_study(n_tenants: int = 2, reqs_per_tenant: int = 8,
+                max_tokens: int = 8) -> dict:
+    """The wire tax, informational: requests/s and TTFT through the
+    OpenAI-compatible socket service vs the in-process Gateway for the
+    same workload (2 tenants on keep-alive connections, SSE streaming
+    so TTFT is measured at the first token frame)."""
+    from repro.api.http import GatewayHTTPServer, HTTPClient, HTTPConfig
+    cfg = ARCHS["olmo-1b"].reduced()
+    params = _store(cfg)
+    fleet = Fleet([BackendNode(f"n{i}", "v5e-1",
+                               param_store=lambda c: params)
+                   for i in range(2)])
+    catalog = ModelCatalog()
+    catalog.register(cfg)
+    ctrl = SDAIController(fleet, catalog)
+    ctrl.cfg.fill_vram = False
+    ctrl.discover()
+    plan = ctrl.deploy([ModelDemand(cfg, min_replicas=2, max_replicas=2,
+                                    n_slots=2, max_len=64)])
+    assert not plan.unplaced
+    gw = Gateway(ctrl)
+    srv = GatewayHTTPServer(gw, HTTPConfig(port=0)).start()
+    n_total = n_tenants * reqs_per_tenant
+    prompts = [(1, 2, (i % 5) + 1) for i in range(n_total)]
+    sampling = SamplingParams(max_tokens=max_tokens)
+    # warm every replica's traces for the admission shapes both legs
+    # will see (prefill batches of 1, 2, and 4) so neither pays compiles
+    warm = SamplingParams(max_tokens=2)
+    for _ in range(2):
+        gw.generate(cfg.name, [1, 2, 3], warm, timeout_s=120)
+    for n in (2, 2, 4, 4):
+        gw.generate_batch(
+            [GenerationRequest(model=cfg.name, prompt=(1, 2, 3),
+                               sampling=warm) for _ in range(n)],
+            timeout_s=120)
+    # in-process reference: identical workload through the Gateway
+    t0 = time.perf_counter()
+    resps = gw.generate_batch(
+        [GenerationRequest(model=cfg.name, prompt=p, sampling=sampling)
+         for p in prompts], timeout_s=120)
+    dt_inproc = time.perf_counter() - t0
+    assert all(r.ok for r in resps)
+    inproc_ttfts = sorted(r.ttft for r in resps if r.ttft is not None)
+    # over the wire: one keep-alive streaming client per tenant.
+    # Workers only collect; every correctness assert runs on the main
+    # thread after join (an assert inside a Thread would be swallowed
+    # and the study would report fabricated metrics)
+    outcomes = []                       # (ttft, n_toks) per request
+    lock = threading.Lock()
+
+    def worker(t):
+        client = HTTPClient(srv.url(), tenant=f"bench{t}")
+        for i in range(reqs_per_tenant):
+            s0 = time.perf_counter()
+            first = None
+            n_toks = 0
+            for ch in client.complete(cfg.name,
+                                      list(prompts[t * reqs_per_tenant
+                                                   + i]),
+                                      max_tokens=max_tokens, stream=True,
+                                      timeout_s=120):
+                if ch["choices"][0].get("token") is not None:
+                    n_toks += 1
+                    if first is None:
+                        first = time.perf_counter() - s0
+            with lock:
+                outcomes.append((first, n_toks))
+        client.close()
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_tenants)]
+    t0 = time.perf_counter()
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    wall = time.perf_counter() - t0
+    srv.stop(timeout_s=60)
+    assert len(outcomes) == n_total, "a worker died mid-study"
+    assert all(n == max_tokens for _, n in outcomes), \
+        "a stream lost tokens over the wire"
+    ttfts = sorted(f for f, _ in outcomes)
+    return {
+        "tenants": n_tenants,
+        "requests": n_total,
+        "http_req_per_s": n_total / wall if wall > 0 else 0.0,
+        "http_p95_ttft_ms": _pct(ttfts, 0.95) * 1e3,
+        "http_mean_ttft_ms": (sum(ttfts) / len(ttfts) * 1e3
+                              if ttfts else 0.0),
+        "inproc_req_per_s": (n_total / dt_inproc
+                             if dt_inproc > 0 else 0.0),
+        "inproc_p95_ttft_ms": _pct(inproc_ttfts, 0.95) * 1e3,
+        "inproc_mean_ttft_ms": (sum(inproc_ttfts) / len(inproc_ttfts)
+                                * 1e3 if inproc_ttfts else 0.0),
+    }
+
+
 def run(n_requests: int = 12, max_tokens: int = 24,
         json_path: str = "BENCH_serving.json"):
     rows = []
@@ -257,6 +356,13 @@ def run(n_requests: int = 12, max_tokens: int = 24,
     report["fused"] = fused
     runtime = _runtime_study()
     report["runtime"] = runtime
+    http = _http_study()
+    report["http"] = http
+    rows.append(("serving_http_wire", 0.0,
+                 f"req_per_s={http['http_req_per_s']:.1f};"
+                 f"p95_ttft_ms={http['http_p95_ttft_ms']:.1f};"
+                 f"inproc_req_per_s={http['inproc_req_per_s']:.1f};"
+                 f"inproc_p95_ttft_ms={http['inproc_p95_ttft_ms']:.1f}"))
     rows.append(("serving_runtime_multitenant", 0.0,
                  f"tenants={runtime['tenants']};"
                  f"completed={runtime['completed']};"

@@ -60,6 +60,14 @@ def main(argv):
               f"caller_pumps={rt.get('caller_pumps')} "
               f"scale_ups={rt.get('scale_ups')}")
 
+    http = current.get("http")
+    if http is not None:              # informational only — never gates
+        print(f"[info] http: req_per_s={http.get('http_req_per_s', 0):.1f} "
+              f"p95_ttft_ms={http.get('http_p95_ttft_ms', 0):.1f} "
+              f"inproc_req_per_s={http.get('inproc_req_per_s', 0):.1f} "
+              f"inproc_p95_ttft_ms="
+              f"{http.get('inproc_p95_ttft_ms', 0):.1f}")
+
     if failures:
         print("\nBench regression gate FAILED:")
         for f in failures:

@@ -1,9 +1,11 @@
-"""Quickstart: AIvailable in ~40 lines, on Gateway API v1.
+"""Quickstart: AIvailable in ~60 lines, on Gateway API v1 + wire v1.
 
 Build the paper's heterogeneous 6-node testbed, deploy two models through
 the SDAI controller (VRAM-aware placement + HAProxy-style frontend), and
 talk to everything through ONE unified gateway: sync `generate`, async
-`submit` + token streaming, and the typed admin snapshot.
+`submit` + token streaming, the typed admin snapshot — then the same
+fleet over the network, via the OpenAI-compatible HTTP service and its
+stdlib client (the old `repro.core.Client` shim is deprecated).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,6 +14,7 @@ import dataclasses
 import jax
 
 from repro.api import Gateway
+from repro.api.http import GatewayHTTPServer, HTTPClient, HTTPConfig
 from repro.cluster import paper_testbed
 from repro.configs import ZOO
 from repro.core import (ControllerConfig, ModelCatalog, ModelDemand,
@@ -43,9 +46,11 @@ def main():
     ctrl = SDAIController(fleet, catalog, ControllerConfig())
     print("discovered nodes:", ctrl.discover())
 
+    # max_len fits a chat-templated prompt (the llama3 header format
+    # alone costs ~120 byte-tokens) plus decode budget
     plan = ctrl.deploy([
-        ModelDemand(llama, min_replicas=2, n_slots=2, max_len=48),
-        ModelDemand(gemma, min_replicas=2, n_slots=2, max_len=48),
+        ModelDemand(llama, min_replicas=2, n_slots=2, max_len=192),
+        ModelDemand(gemma, min_replicas=2, n_slots=2, max_len=192),
     ])
     print(f"deployed {len(plan.assignments)} instances, "
           f"fleet VRAM utilization {ctrl.fleet_utilization():.1%}")
@@ -73,6 +78,22 @@ def main():
     snap = gw.admin.snapshot()
     print(f"admin snapshot: {snap.connected}/{snap.total} agents, "
           f"routing={ {m: len(r) for m, r in snap.routing.items()} }")
+
+    # the same fleet over the wire: OpenAI-compatible HTTP + SSE
+    server = GatewayHTTPServer(gw, HTTPConfig(port=0)).start()
+    client = HTTPClient(server.url(), tenant="quickstart")
+    print(f"HTTP service on {server.url()}: models={client.models()}")
+    out = client.chat("llama3.2-1b", ["hello fleet"], max_tokens=8)
+    choice = out["choices"][0]
+    print(f"  chat   {out['model']:14s} -> {choice['token_ids']}  "
+          f"(finish={choice['finish_reason']}, "
+          f"via {out['metadata']['node']})")
+    deltas = sum(1 for c in client.chat("gemma3-1b", ["stream please"],
+                                        max_tokens=8, stream=True)
+                 if c["choices"][0].get("delta", {}).get("token")
+                 is not None)
+    print(f"  stream gemma3-1b      -> {deltas} SSE token deltas")
+    server.stop()
 
 
 if __name__ == "__main__":

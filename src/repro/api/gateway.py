@@ -134,7 +134,6 @@ class GenerationHandle:
         with self._cv:
             if self._done:
                 return
-            self._done = True
             self._response = resp = response_from_internal(req)
             if self._admitted:
                 self._gw._release(self.request.model)
@@ -149,6 +148,10 @@ class GenerationHandle:
             else:
                 self._events.append(StreamEvent(StreamEventType.FINISH,
                                                 response=resp))
+            # `_done` goes last: result()/stream() read it without the
+            # lock, so everything they may touch afterwards (_response,
+            # the terminal event) must already be in place
+            self._done = True
             self._cv.notify_all()
 
     def _reject(self, error: APIError):

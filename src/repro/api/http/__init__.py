@@ -1,0 +1,41 @@
+"""Wire protocol v1 — the OpenAI-compatible HTTP service layer.
+
+    from repro.api.http import GatewayHTTPServer, HTTPClient
+
+    server = GatewayHTTPServer(gateway).start()   # runtime-backed, no pumps
+    client = HTTPClient(server.url(), tenant="acme")
+    client.models()
+    client.chat("llama3.2-1b", ["hello"], stream=True)
+    server.stop()                                  # drain, park, join
+
+Launch the demo fleet service:  ``python -m repro.api.http``
+Talk to any service:            ``python -m repro.api.http.client``
+"""
+from repro.api.http.chat import (ChatMessage, ChatTemplate, decode_tokens,
+                                 encode_text, prefix_budget,
+                                 register_template, render_prompt,
+                                 template_for)
+from repro.api.http.schemas import (HTTP_STATUS, ChatCall, CompletionCall,
+                                    WireError, error_body,
+                                    parse_chat_request,
+                                    parse_completion_request, sse_event,
+                                    status_for)
+from repro.api.http.server import GatewayHTTPServer, HTTPConfig
+
+
+def __getattr__(name):
+    # lazy: `python -m repro.api.http.client` imports this package first,
+    # and an eager client import here would trip runpy's double-import
+    # warning for that module
+    if name in ("HTTPClient", "HTTPClientError"):
+        from repro.api.http import client
+        return getattr(client, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+__all__ = ["ChatCall", "ChatMessage", "ChatTemplate", "CompletionCall",
+           "GatewayHTTPServer", "HTTPClient", "HTTPClientError",
+           "HTTPConfig", "HTTP_STATUS", "WireError", "decode_tokens",
+           "encode_text", "error_body", "parse_chat_request",
+           "parse_completion_request", "prefix_budget",
+           "register_template", "render_prompt", "sse_event",
+           "status_for", "template_for"]

@@ -27,7 +27,7 @@ class ErrorCode(enum.Enum):
     OVERLOADED = "overloaded"          # 429: admission/queue limit hit
     ENGINE_FAILED = "engine_failed"    # 500: backend crashed mid-request
     CANCELLED = "cancelled"            # 499: caller aborted the request
-    TIMEOUT = "timeout"                # 504: pump budget exhausted
+    TIMEOUT = "timeout"                # 504: wall-clock deadline exceeded
     DRAINING = "draining"              # 503: model is being drained
     INVALID_REQUEST = "invalid_request"  # 400: malformed request
     RATE_LIMITED = "rate_limited"      # 429: tenant token bucket empty

@@ -1,14 +1,17 @@
-"""Client Interface — back-compat shim over the Gateway API v1.
+"""Client Interface — DEPRECATED back-compat shim over Gateway API v1.
 
 Historically the OpenWebUI analogue: one logical endpoint for every
-deployed model.  New code should use `repro.api.Gateway` directly — it
-adds streaming, async handles, admission control, and frozen response
-types.  `Client` survives as a thin adapter that routes through a
-`Gateway` but keeps returning the internal mutable `Request` objects the
-seed API exposed.
+deployed model.  In-process callers should use `repro.api.Gateway`
+(streaming, async handles, admission control, frozen response types);
+network callers should use `repro.api.http.HTTPClient` against a
+`GatewayHTTPServer`.  `Client` survives one more cycle as a thin adapter
+that routes through a `Gateway` but keeps returning the internal mutable
+`Request` objects the seed API exposed; constructing one emits a
+`DeprecationWarning`.
 """
 from __future__ import annotations
 
+import warnings
 from typing import List, Optional
 
 from repro.core.controller import SDAIController
@@ -18,6 +21,10 @@ from repro.serving.sampler import SamplingParams
 
 class Client:
     def __init__(self, controller: SDAIController):
+        warnings.warn(
+            "repro.core.Client is deprecated: use repro.api.Gateway "
+            "in-process or repro.api.http.HTTPClient over the wire",
+            DeprecationWarning, stacklevel=2)
         # imported lazily: repro.api builds on repro.core, and this shim
         # is the one place the dependency points back up
         from repro.api.gateway import Gateway, GatewayConfig

@@ -28,18 +28,31 @@ from repro.core.registry import (ModelCatalog, NodeRegistry, ReplicaInfo,
 
 @dataclasses.dataclass
 class AutoscaleConfig:
-    """Load-feedback scale-up policy (paper: reallocation under workload
-    fluctuations).  A model is "hot" when its backlog-per-replica exceeds
+    """Load-feedback elasticity policy (paper: reallocation under
+    workload fluctuations), in both directions.
+
+    Scale-up: a model is "hot" when its backlog-per-replica exceeds
     `queue_high` OR its oldest queued request has waited longer than
     `head_wait_high_s` (a shallow-but-stale queue is still starvation);
     `sustain_ticks` consecutive hot ticks place one more replica into
     free VRAM, then `cooldown_ticks` of hysteresis before the next
-    growth step."""
+    growth step.
+
+    Scale-down: a model is "idle" when it has zero backlog AND zero
+    in-flight requests while holding more replicas than its demand's
+    `min_replicas`; `idle_sustain_ticks` consecutive idle ticks retire
+    one *surplus, work-free* replica (VRAM returns to the pool for other
+    models), then `down_cooldown_ticks` of hysteresis.  Replicas with
+    queued or decoding work are never retired, and the floor is always
+    the demand's `min_replicas`."""
     enabled: bool = True
     queue_high: float = 2.0        # queued requests per healthy replica
     head_wait_high_s: float = 2.0  # oldest-queued-request age threshold
     sustain_ticks: int = 3
     cooldown_ticks: int = 10
+    scale_down: bool = True
+    idle_sustain_ticks: int = 20   # idle ticks before retiring a replica
+    down_cooldown_ticks: int = 20
 
 
 @dataclasses.dataclass
@@ -79,11 +92,14 @@ class SDAIController:
                                         self.cfg.frontend)
         self.demands: Dict[str, ModelDemand] = {}
         self._dead_nodes: set = set()
-        # load-feedback autoscale state: model -> consecutive hot ticks /
-        # remaining cooldown ticks
+        # load-feedback autoscale state: model -> consecutive hot/idle
+        # ticks and remaining per-direction cooldown ticks
         self._pressure_streak: Dict[str, int] = {}
         self._scale_cooldown: Dict[str, int] = {}
+        self._idle_streak: Dict[str, int] = {}
+        self._down_cooldown: Dict[str, int] = {}
         self.scale_ups = 0
+        self.scale_downs = 0
 
     # ---------------------------------------------------------------- #
     # Discovery phase (paper: "Upon startup, it discovers and establishes
@@ -194,19 +210,35 @@ class SDAIController:
         if not acfg.enabled:
             return
         for model, ml in load.items():
-            cd = self._scale_cooldown.get(model, 0)
-            if cd > 0:
-                self._scale_cooldown[model] = cd - 1
-                continue
             replicas = max(ml.replicas, 1)
             hot = (ml.queue_depth / replicas >= acfg.queue_high
                    or ml.max_head_wait_s >= acfg.head_wait_high_s)
-            streak = self._pressure_streak.get(model, 0) + 1 if hot else 0
-            self._pressure_streak[model] = streak
-            if streak >= acfg.sustain_ticks:
-                self._pressure_streak[model] = 0
-                if self.scale_up(model):
-                    self._scale_cooldown[model] = acfg.cooldown_ticks
+            idle = ml.queue_depth == 0 and ml.inflight == 0
+            # ---- scale-up under sustained pressure ------------------ #
+            cd = self._scale_cooldown.get(model, 0)
+            if cd > 0:
+                self._scale_cooldown[model] = cd - 1
+            else:
+                streak = self._pressure_streak.get(model, 0) + 1 \
+                    if hot else 0
+                self._pressure_streak[model] = streak
+                if streak >= acfg.sustain_ticks:
+                    self._pressure_streak[model] = 0
+                    if self.scale_up(model):
+                        self._scale_cooldown[model] = acfg.cooldown_ticks
+            # ---- scale-down after a sustained idle streak ----------- #
+            if not acfg.scale_down:
+                continue
+            dcd = self._down_cooldown.get(model, 0)
+            if dcd > 0:
+                self._down_cooldown[model] = dcd - 1
+                continue
+            istreak = self._idle_streak.get(model, 0) + 1 if idle else 0
+            self._idle_streak[model] = istreak
+            if istreak >= acfg.idle_sustain_ticks:
+                self._idle_streak[model] = 0
+                if self.scale_down(model):
+                    self._down_cooldown[model] = acfg.down_cooldown_ticks
 
     def scale_up(self, model: str) -> bool:
         """Place one additional replica of `model` into free VRAM (bounded
@@ -230,6 +262,51 @@ class SDAIController:
                       replicas=have + len(keys),
                       placed=[str(k) for k in keys])
         return True
+
+    def _instance_busy(self, inst) -> bool:
+        if inst is None:
+            return False
+        if inst.engine is not None:
+            return bool(inst.engine.slot_req
+                        or inst.engine.scheduler.depth)
+        return inst.sim_active > 0
+
+    def scale_down(self, model: str) -> bool:
+        """Retire one surplus replica of `model` back toward the
+        demand's `min_replicas` floor, freeing its VRAM.  Only a replica
+        with no queued or in-flight work is eligible (most recently
+        placed first, unwinding autoscale growth); when every surplus
+        replica is busy nothing is retired.  Returns True when a replica
+        was actually removed."""
+        demand = self.demands.get(model)
+        floor = max(demand.min_replicas, 1) if demand is not None else 1
+        infos = self.replicas.for_model(model)
+        if len(infos) <= floor:
+            return False
+        for info in reversed(infos):
+            node = self.fleet.nodes.get(info.key.node_id)
+            if node is None or not node.alive:
+                continue
+            with node.lock:       # don't retire an engine mid-step
+                inst = node.instances.get(info.key.instance_id)
+                if self._instance_busy(inst):
+                    continue
+                # node.submit is deliberately lock-free, so a request
+                # can still slip into the scheduler between the busy
+                # check and undeploy: fail the engine first, so any
+                # such request finishes with ENGINE_FAILED and the
+                # gateway's pre-token retry re-routes it — never
+                # silently stranded
+                if inst is not None and inst.engine is not None:
+                    inst.engine.fail()
+                node.undeploy(info.key.instance_id)
+            self.replicas.remove(info.key)
+            self.scale_downs += 1
+            self.bus.emit("autoscaled_down", model=model,
+                          replicas=len(self.replicas.for_model(model)),
+                          retired=str(info.key))
+            return True
+        return False
 
     def _handle_node_death(self, nid: str):
         self._dead_nodes.add(nid)

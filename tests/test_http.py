@@ -1,0 +1,517 @@
+"""Wire protocol v1: ErrorCode -> HTTP status mapping, SSE framing,
+chat-template golden renders, tenant auth + rate limiting over keep-alive
+connections, remote cancel, drain-on-stop, and HTTP-vs-in-process greedy
+parity."""
+import http.client
+import json
+import threading
+import time
+
+import pytest
+
+from repro.api import ErrorCode, Gateway, GatewayConfig
+from repro.api.http import (HTTP_STATUS, ChatMessage, GatewayHTTPServer,
+                            HTTPClient, HTTPClientError, HTTPConfig,
+                            decode_tokens, encode_text, error_body,
+                            render_prompt, template_for)
+from repro.api.http.chat import CHATML, GEMMA, LLAMA3, PLAIN
+from repro.api.types import APIError
+from repro.cluster import BackendNode, Fleet
+from repro.configs import ARCHS, ZOO
+from repro.core import ModelCatalog, ModelDemand, SDAIController
+from repro.serving import SamplingParams
+
+MODEL = "olmo-1b-reduced"
+
+
+def _stack(param_store, n_nodes=2, n_slots=2, max_len=160,
+           min_replicas=2):
+    fleet = Fleet([BackendNode(f"h{i}", "v5e-1", param_store=param_store)
+                   for i in range(n_nodes)])
+    cfg = ARCHS["olmo-1b"].reduced()
+    catalog = ModelCatalog()
+    catalog.register(cfg)
+    ctrl = SDAIController(fleet, catalog)
+    ctrl.cfg.fill_vram = False
+    ctrl.discover()
+    plan = ctrl.deploy([ModelDemand(cfg, min_replicas=min_replicas,
+                                    max_replicas=min_replicas,
+                                    n_slots=n_slots, max_len=max_len)])
+    assert not plan.unplaced
+    return fleet, ctrl
+
+
+@pytest.fixture(scope="module")
+def server(param_store):
+    """Module-shared healthy service (tests that kill nodes or need a
+    special GatewayConfig build their own)."""
+    _, ctrl = _stack(param_store)
+    srv = GatewayHTTPServer(Gateway(ctrl), HTTPConfig(port=0)).start()
+    yield srv
+    assert srv.stop(timeout_s=30.0)
+
+
+@pytest.fixture()
+def client(server):
+    c = HTTPClient(server.url())
+    yield c
+    c.close()
+
+
+# -------------------- error mapping -------------------------------- #
+def test_status_table_covers_every_error_code():
+    expected = {
+        ErrorCode.NO_BACKEND: 503, ErrorCode.OVERLOADED: 429,
+        ErrorCode.ENGINE_FAILED: 500, ErrorCode.CANCELLED: 499,
+        ErrorCode.TIMEOUT: 504, ErrorCode.DRAINING: 503,
+        ErrorCode.INVALID_REQUEST: 400, ErrorCode.RATE_LIMITED: 429,
+    }
+    assert HTTP_STATUS == expected          # every code, documented status
+    for code in ErrorCode:
+        body = error_body(APIError(code, "boom"))["error"]
+        assert body["type"] == code.value
+        assert body["code"] == expected[code]
+        assert body["message"] == "boom"
+        assert body["retryable"] == code.retryable
+
+
+def test_every_error_code_reachable_over_http(param_store):
+    """One stack, every taxonomy entry observed from the wire with its
+    documented status (CANCELLED/ENGINE_FAILED via their own scenarios
+    below)."""
+    _, ctrl = _stack(param_store)
+    srv = GatewayHTTPServer(Gateway(ctrl), HTTPConfig(port=0)).start()
+    c = HTTPClient(srv.url())
+    try:
+        # INVALID_REQUEST (400): empty prompt
+        with pytest.raises(HTTPClientError) as e:
+            c.complete(MODEL, [], max_tokens=2)
+        assert (e.value.status, e.value.code) == (
+            400, ErrorCode.INVALID_REQUEST)
+        # ... also malformed JSON bodies
+        conn = http.client.HTTPConnection("127.0.0.1", srv.port)
+        conn.request("POST", "/v1/completions", b"{not json",
+                     {"Content-Type": "application/json"})
+        assert conn.getresponse().status == 400
+        conn.close()
+        # NO_BACKEND (503): nothing serves the model
+        with pytest.raises(HTTPClientError) as e:
+            c.complete("ghost-model", [1], max_tokens=2)
+        assert (e.value.status, e.value.code) == (
+            503, ErrorCode.NO_BACKEND)
+        assert e.value.retryable
+        # TIMEOUT (504): sub-millisecond wall-clock deadline
+        with pytest.raises(HTTPClientError) as e:
+            c.complete(MODEL, [1, 2], max_tokens=140,
+                       timeout_s=0.001)
+        assert (e.value.status, e.value.code) == (504, ErrorCode.TIMEOUT)
+        # RATE_LIMITED (429): tenant bucket of one request, no refill
+        c.set_tenant_quota("wire-capped", requests_per_s=0.001,
+                           burst_requests=1)
+        capped = HTTPClient(srv.url(), tenant="wire-capped")
+        assert capped.complete(MODEL, [1], max_tokens=2)["choices"]
+        with pytest.raises(HTTPClientError) as e:
+            capped.complete(MODEL, [1], max_tokens=2)
+        assert (e.value.status, e.value.code) == (
+            429, ErrorCode.RATE_LIMITED)
+        capped.close()
+        # DRAINING (503): admin drain, then resume restores service
+        assert c.admin_drain(MODEL)["drained"]
+        with pytest.raises(HTTPClientError) as e:
+            c.complete(MODEL, [1], max_tokens=2)
+        assert (e.value.status, e.value.code) == (503, ErrorCode.DRAINING)
+        c.admin_resume(MODEL)
+        assert c.complete(MODEL, [1], max_tokens=2)["choices"]
+    finally:
+        c.close()
+        assert srv.stop(timeout_s=30.0)
+
+
+def test_overloaded_maps_to_429(param_store):
+    _, ctrl = _stack(param_store)
+    gw = Gateway(ctrl, GatewayConfig(max_inflight_per_model=0))
+    srv = GatewayHTTPServer(gw, HTTPConfig(port=0)).start()
+    c = HTTPClient(srv.url())
+    try:
+        with pytest.raises(HTTPClientError) as e:
+            c.complete(MODEL, [1], max_tokens=2)
+        assert (e.value.status, e.value.code) == (
+            429, ErrorCode.OVERLOADED)
+        # stream requests see the same plain HTTP rejection, not SSE
+        with pytest.raises(HTTPClientError) as e:
+            list(c.complete(MODEL, [1], max_tokens=2, stream=True))
+        assert e.value.status == 429
+    finally:
+        c.close()
+        assert srv.stop(timeout_s=30.0)
+
+
+def test_cancelled_maps_to_499(param_store):
+    """Remote cancel: a non-stream request blocked decoding is aborted
+    from a second connection and comes back as HTTP 499."""
+    _, ctrl = _stack(param_store, n_nodes=1, min_replicas=1)
+    srv = GatewayHTTPServer(Gateway(ctrl), HTTPConfig(port=0)).start()
+    c = HTTPClient(srv.url())
+    errors = []
+
+    def blocked():
+        try:
+            c.complete(MODEL, [1, 2], max_tokens=140, timeout_s=60)
+        except HTTPClientError as e:
+            errors.append(e)
+
+    t = threading.Thread(target=blocked)
+    t.start()
+    try:
+        rid = None
+        deadline = time.monotonic() + 30
+        while rid is None and time.monotonic() < deadline:
+            with srv._handles_lock:
+                ids = list(srv._handles)
+            rid = ids[0] if ids else None
+            time.sleep(0.01)
+        assert rid is not None
+        c2 = HTTPClient(srv.url())
+        assert c2.cancel(rid) is True
+        t.join(timeout=30)
+        assert not t.is_alive()
+        assert len(errors) == 1
+        assert (errors[0].status, errors[0].code) == (
+            499, ErrorCode.CANCELLED)
+        # cancelling a settled request 404s (handle untracked just
+        # after the 499 is written; poll past that sliver)
+        deadline = time.monotonic() + 10
+        while True:
+            try:
+                assert c2.cancel(rid) is False   # done, still tracked
+                assert time.monotonic() < deadline
+                time.sleep(0.01)
+            except HTTPClientError as e:
+                assert e.status == 404
+                break
+        c2.close()
+    finally:
+        t.join(timeout=5)
+        c.close()
+        assert srv.stop(timeout_s=30.0)
+
+
+def test_engine_failure_midstream_is_terminal_sse_error(param_store):
+    """After the first streamed token a backend death surfaces as a
+    terminal SSE error frame (engine_failed, code 500) followed by
+    [DONE] — never a broken stream."""
+    fleet, ctrl = _stack(param_store, n_nodes=1, min_replicas=1)
+    srv = GatewayHTTPServer(Gateway(ctrl), HTTPConfig(port=0)).start()
+    c = HTTPClient(srv.url())
+    try:
+        frames = []
+        for chunk in c.complete(MODEL, [1, 2, 3], max_tokens=140,
+                                stream=True, timeout_s=60):
+            frames.append(chunk)
+            if len([f for f in frames if "error" not in f
+                    and f["choices"][0].get("token") is not None]) == 1:
+                fleet.fail_node("h0")       # mid-stream outage
+        assert "error" in frames[-1]        # terminal structured frame
+        err = frames[-1]["error"]
+        assert err["type"] == "engine_failed"
+        assert err["code"] == 500
+        # the SSE generator only returns on [DONE], so reaching here
+        # proves the terminator followed the error frame
+    finally:
+        c.close()
+        srv.stop(timeout_s=30.0)
+
+
+# -------------------- basic surface -------------------------------- #
+def test_healthz_and_models(client):
+    health = client.healthz()
+    assert health["status"] == "ok" and health["runtime_active"]
+    entries = client.models_full()
+    assert [m["id"] for m in entries] == [MODEL]
+    assert entries[0]["family"] == "dense"
+    assert entries[0]["replicas"] == 2
+    assert entries[0]["max_context"] == 160
+
+
+def test_http_greedy_matches_inprocess_gateway(server, client):
+    """Acceptance: completion bytes over the socket == Gateway.generate
+    for the same request."""
+    prompt = [1, 2, 3, 4]
+    out = client.complete(MODEL, prompt, max_tokens=8)
+    resp = server.gateway.generate(MODEL, prompt,
+                                   SamplingParams(max_tokens=8),
+                                   timeout_s=60)
+    assert resp.ok
+    choice = out["choices"][0]
+    assert choice["token_ids"] == list(resp.tokens)
+    assert choice["text"] == decode_tokens(resp.tokens)
+    assert choice["finish_reason"] == resp.finish_reason
+    assert out["usage"] == {"prompt_tokens": 4, "completion_tokens": 8,
+                            "total_tokens": 12}
+    assert out["metadata"]["node"].startswith("h")
+
+
+def test_text_prompt_encodes_with_model_vocab(client):
+    out = client.complete(MODEL, "hi!", max_tokens=4)
+    assert out["usage"]["prompt_tokens"] == len("hi!".encode())
+
+
+def test_sse_stream_framing(server):
+    """Raw-socket SSE: ordered data frames, one finish chunk, then the
+    literal `data: [DONE]` terminator."""
+    conn = http.client.HTTPConnection("127.0.0.1", server.port,
+                                      timeout=60)
+    conn.request("POST", "/v1/completions", json.dumps({
+        "model": MODEL, "prompt": [5, 6], "max_tokens": 6,
+        "stream": True}), {"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    assert resp.status == 200
+    assert resp.headers["Content-Type"] == "text/event-stream"
+    assert int(resp.headers["X-Request-Id"]) >= 0
+    payloads = []
+    while True:
+        line = resp.readline().strip()
+        if not line.startswith(b"data:"):
+            continue
+        data = line[len(b"data:"):].strip()
+        payloads.append(data)
+        if data == b"[DONE]":
+            break
+    conn.close()
+    assert payloads[-1] == b"[DONE]"
+    frames = [json.loads(p) for p in payloads[:-1]]
+    tokens = [f["choices"][0] for f in frames
+              if f["choices"][0].get("token") is not None]
+    assert [t["token_index"] for t in tokens] == list(range(6))
+    finals = [f for f in frames if f["choices"][0]["finish_reason"]]
+    assert len(finals) == 1                 # exactly one terminal chunk
+    assert finals[0]["choices"][0]["finish_reason"] == "length"
+    assert frames[-1] is finals[0]          # ... and it precedes [DONE]
+
+
+def test_chat_stream_role_then_deltas(client):
+    frames = list(client.chat(MODEL, ["hello"], max_tokens=5,
+                              stream=True))
+    assert frames[0]["choices"][0]["delta"]["role"] == "assistant"
+    toks = [f["choices"][0]["delta"] for f in frames
+            if f["choices"][0].get("delta", {}).get("token") is not None]
+    assert len(toks) == 5
+    assert [d["token_index"] for d in toks] == list(range(5))
+    assert frames[-1]["choices"][0]["finish_reason"] == "length"
+
+
+def test_stream_tokens_match_nonstream(client):
+    streamed = [f["choices"][0]["token"]
+                for f in client.complete(MODEL, [9, 8, 7], max_tokens=6,
+                                         stream=True)
+                if f["choices"][0].get("token") is not None]
+    flat = client.complete(MODEL, [9, 8, 7], max_tokens=6)
+    assert streamed == flat["choices"][0]["token_ids"]
+
+
+def test_validation_errors(client):
+    for body_err in (
+            {"prompt": [1], "max_tokens": 0},
+            {"prompt": [1], "temperature": -1.0},
+            {"prompt": [1], "top_p": 0.0},
+            {"prompt": [1], "n": 2},
+            {"prompt": [1, "x"]},
+            {"prompt": [1], "timeout_s": 0},
+    ):
+        with pytest.raises(HTTPClientError) as e:
+            client.complete(MODEL, body_err.pop("prompt"), max_tokens=2,
+                            extra=body_err)
+        assert e.value.status == 400, body_err
+    with pytest.raises(HTTPClientError) as e:
+        client.chat(MODEL, [{"role": "alien", "content": "hi"}])
+    assert e.value.status == 400
+    with pytest.raises(HTTPClientError) as e:
+        client.chat(MODEL, [])
+    assert e.value.status == 400
+
+
+def test_unknown_route_and_method(server):
+    conn = http.client.HTTPConnection("127.0.0.1", server.port)
+    conn.request("GET", "/v2/everything")
+    resp = conn.getresponse()
+    assert resp.status == 404
+    resp.read()                    # keep-alive: drain before reuse
+    conn.request("GET", "/v1/completions")
+    resp = conn.getresponse()
+    assert resp.status == 405
+    resp.read()
+    conn.close()
+
+
+# -------------------- chat templates ------------------------------- #
+def test_template_registry_resolution():
+    assert template_for("llama3.2-1b") is LLAMA3
+    assert template_for("llama3.2-1b-reduced") is LLAMA3
+    assert template_for("gemma3-4b") is GEMMA
+    assert template_for("qwen3-8b") is CHATML
+    assert template_for("deepseek-r1-7b") is CHATML
+    assert template_for("mystery-model") is PLAIN
+
+
+def test_chat_template_golden_renders():
+    msgs = [ChatMessage("system", "be brief"), ChatMessage("user", "hi")]
+    assert LLAMA3.render_text(msgs) == (
+        "<|begin_of_text|>"
+        "<|start_header_id|>system<|end_header_id|>\n\nbe brief<|eot_id|>"
+        "<|start_header_id|>user<|end_header_id|>\n\nhi<|eot_id|>"
+        "<|start_header_id|>assistant<|end_header_id|>\n\n")
+    assert GEMMA.render_text(msgs) == (
+        "<bos>"
+        "<start_of_turn>system\nbe brief<end_of_turn>\n"
+        "<start_of_turn>user\nhi<end_of_turn>\n"
+        "<start_of_turn>model\n")
+    assert CHATML.render_text(msgs) == (
+        "<|im_start|>system\nbe brief<|im_end|>\n"
+        "<|im_start|>user\nhi<|im_end|>\n"
+        "<|im_start|>assistant\n")
+    assert PLAIN.render_text(msgs) == (
+        "system: be brief\nuser: hi\nassistant:")
+    # assistant -> model rename is gemma-only
+    turn = [ChatMessage("assistant", "ok")]
+    assert "<start_of_turn>model\nok" in GEMMA.render_text(turn)
+    assert "assistant\nok" in CHATML.render_text(turn)
+
+
+def test_vision_models_get_image_marker_and_prefix_budget():
+    from repro.api.http import prefix_budget
+    vlm = ZOO["gemma3-4b"].reduced()            # frontend="vision"
+    assert prefix_budget(vlm) > 0
+    msgs = [ChatMessage("user", "what is this?")]
+    with_marker = render_prompt(vlm.name, msgs, vlm)
+    text = GEMMA.render_text(msgs, vision=True)
+    assert with_marker == encode_text(text, vlm.vocab)
+    assert "<start_of_image>" in text
+    # non-vision render of the same family omits the marker
+    dense = ZOO["gemma3-1b"].reduced()
+    assert "<start_of_image>" not in GEMMA.render_text(msgs)
+    assert len(render_prompt(dense.name, msgs, dense)) < len(with_marker)
+
+
+def test_codec_roundtrip():
+    text = "hello ☃ world"
+    toks = encode_text(text, 256)
+    assert decode_tokens(toks) == text
+    assert decode_tokens([72, 105, 9999]) == "Hi�"
+
+
+# -------------------- tenancy over keep-alive ---------------------- #
+def test_concurrent_keepalive_tenants_one_rate_limited(server, client):
+    """Two tenants on concurrent keep-alive connections: the capped one
+    sees 429 RATE_LIMITED mid-burst, the free one never does."""
+    client.set_tenant_quota("ka-capped", requests_per_s=0.001,
+                            burst_requests=2)
+    results = {}
+
+    def worker(tenant):
+        c = HTTPClient(server.url(), tenant=tenant)
+        ok, limited, other = 0, 0, []
+        first = c.healthz()                      # open the connection
+        sock = c._conn.sock
+        for i in range(5):
+            try:
+                c.complete(MODEL, [1, 2, i + 1], max_tokens=3,
+                           timeout_s=60)
+                ok += 1
+            except HTTPClientError as e:
+                if e.code is ErrorCode.RATE_LIMITED:
+                    limited += 1
+                else:
+                    other.append(e)
+        reused = c._conn is not None and c._conn.sock is sock
+        results[tenant] = (ok, limited, other, reused, first)
+        c.close()
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in ("ka-free", "ka-capped")]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+        assert not t.is_alive()
+    ok, limited, other, reused, _ = results["ka-free"]
+    assert (ok, limited, other) == (5, 0, [])
+    assert reused                       # keep-alive: one socket, 6 calls
+    ok, limited, other, reused, _ = results["ka-capped"]
+    assert ok == 2 and limited == 3 and other == []
+    assert reused                       # 429s ride the same connection
+    client.remove_tenant_quota("ka-capped")
+
+
+def test_tenant_quota_admin_roundtrip(client):
+    client.set_tenant_quota("acme", requests_per_s=7, tokens_per_s=100)
+    quotas = client.tenant_quotas()
+    assert quotas["acme"]["requests_per_s"] == 7
+    assert quotas["acme"]["tokens_per_s"] == 100
+    client.remove_tenant_quota("acme")
+    assert "acme" not in client.tenant_quotas()
+
+
+# -------------------- admin over the wire -------------------------- #
+def test_admin_snapshot_and_scale(client):
+    snap = client.admin_snapshot()
+    assert snap["connected"] == 2
+    assert snap["models"][MODEL] == 2
+    assert client.admin_scale(MODEL, 2)["ok"]       # no-op at target
+    with pytest.raises(HTTPClientError) as e:
+        client.admin_deploy("never-registered")
+    assert e.value.status == 400
+
+
+# -------------------- lifecycle ------------------------------------ #
+def test_stop_drains_inflight_stream(param_store):
+    """stop(drain=True) lets an open SSE stream finish ([DONE] arrives)
+    before the server parks, then refuses new connections."""
+    _, ctrl = _stack(param_store)
+    srv = GatewayHTTPServer(Gateway(ctrl), HTTPConfig(port=0)).start()
+    url = srv.url()
+    c = HTTPClient(url)
+    frames = []
+    stream = c.complete(MODEL, [1, 2], max_tokens=40, stream=True,
+                        timeout_s=60)
+    frames.append(next(stream))                  # stream is live
+    stopped = {}
+    t = threading.Thread(
+        target=lambda: stopped.update(ok=srv.stop(timeout_s=60.0)))
+    t.start()
+    frames.extend(stream)                        # drain to [DONE]
+    t.join(timeout=90)
+    assert not t.is_alive() and stopped["ok"] is True
+    toks = [f for f in frames
+            if f["choices"][0].get("token") is not None]
+    assert len(toks) == 40                       # nothing truncated
+    assert frames[-1]["choices"][0]["finish_reason"] == "length"
+    c.close()
+    with pytest.raises((ConnectionRefusedError, HTTPClientError, OSError)):
+        HTTPClient(url).healthz()
+
+
+def test_deprecated_client_shim_warns(param_store):
+    from repro.core import Client
+    _, ctrl = _stack(param_store, n_nodes=1, min_replicas=1)
+    with pytest.warns(DeprecationWarning, match="Gateway"):
+        shim = Client(ctrl)
+    req = shim.generate(MODEL, [1, 2], SamplingParams(max_tokens=3))
+    assert len(req.output) == 3                  # still functional
+
+
+# -------------------- CLI ------------------------------------------ #
+def test_cli_models_complete_and_stream(server, capsys):
+    from repro.api.http.client import _main
+    url = server.url()
+    assert _main(["--url", url, "models"]) == 0
+    out = capsys.readouterr().out
+    assert MODEL in out and "replicas=2" in out
+    assert _main(["--url", url, "complete", MODEL, "1,2,3", "--tokens",
+                  "--max-tokens", "4"]) == 0
+    body = json.loads(capsys.readouterr().out)
+    assert len(body["choices"][0]["token_ids"]) == 4
+    assert _main(["--url", url, "chat", MODEL, "hello",
+                  "--max-tokens", "3", "--stream"]) == 0
+    assert "[finish] length" in capsys.readouterr().out
+    assert _main(["--url", url, "health"]) == 0
+    assert json.loads(capsys.readouterr().out)["status"] == "ok"

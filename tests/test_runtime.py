@@ -1,6 +1,8 @@
 """Continuous serving runtime: background pumps, event-blocking handles,
-per-tenant token buckets, wall-clock timeouts, load-driven autoscale, and
-the threaded soak (concurrent tenants + mid-run node kill)."""
+per-tenant token buckets, wall-clock timeouts, load-driven autoscale (up
+AND down), and the threaded soak (concurrent tenants + mid-run node
+kill)."""
+import dataclasses
 import threading
 import time
 
@@ -214,6 +216,95 @@ def test_idle_models_never_scale(param_store):
                                          replicas=1)})
     assert ctrl.scale_ups == 0
     assert len(ctrl.replicas.for_model(MODEL)) == 1
+
+
+# -------------------- load-driven scale-down ----------------------- #
+def test_idle_streak_scales_down_to_min_with_cooldown(param_store):
+    fleet, ctrl = _stack(param_store, n_nodes=3, min_replicas=1,
+                         max_replicas=3, fill=False)
+    acfg = ctrl.cfg.autoscale
+    acfg.idle_sustain_ticks, acfg.down_cooldown_ticks = 3, 4
+    assert ctrl.scale_up(MODEL) and ctrl.scale_up(MODEL)
+    assert len(ctrl.replicas.for_model(MODEL)) == 3
+    hbm_before = fleet.used_hbm()
+
+    def idle_tick():
+        ctrl.tick(load={MODEL: ModelLoad(
+            queue_depth=0, inflight=0,
+            replicas=len(ctrl.frontend.healthy_replicas(MODEL)))})
+
+    for _ in range(acfg.idle_sustain_ticks):
+        idle_tick()
+    assert ctrl.scale_downs == 1            # one retirement per streak
+    assert len(ctrl.replicas.for_model(MODEL)) == 2
+    assert ctrl.bus.of_kind("autoscaled_down")
+    assert fleet.used_hbm() < hbm_before    # VRAM returned to the pool
+    # cooldown: the next idle ticks don't immediately retire another
+    for _ in range(2):
+        idle_tick()
+    assert ctrl.scale_downs == 1
+    # ... but a full streak after cooldown does, down to min_replicas
+    for _ in range(40):
+        idle_tick()
+    assert ctrl.scale_downs == 2
+    assert len(ctrl.replicas.for_model(MODEL)) == 1
+    # the floor holds no matter how long the model idles
+    for _ in range(40):
+        idle_tick()
+    assert len(ctrl.replicas.for_model(MODEL)) == 1
+
+
+def test_scale_down_never_retires_busy_replicas(param_store):
+    fleet, ctrl = _stack(param_store, n_nodes=2, min_replicas=2,
+                         max_replicas=2, fill=False)
+    ctrl.demands[MODEL] = dataclasses.replace(ctrl.demands[MODEL],
+                                              min_replicas=1)
+    gw = Gateway(ctrl)
+    handles = [gw.submit(MODEL, [1, 2, i + 1],
+                         SamplingParams(max_tokens=4)) for i in range(2)]
+    # both replicas hold work -> nothing is eligible to retire
+    assert ctrl.scale_down(MODEL) is False
+    assert len(ctrl.replicas.for_model(MODEL)) == 2
+    for h in handles:
+        assert h.result(timeout_s=60).ok
+    # drained: the surplus replica retires cleanly
+    assert ctrl.scale_down(MODEL) is True
+    assert len(ctrl.replicas.for_model(MODEL)) == 1
+    assert gw.generate(MODEL, [3], SamplingParams(max_tokens=2),
+                       timeout_s=60).ok
+
+
+def test_runtime_closes_the_elasticity_loop(param_store):
+    """Through the live runtime: sustained pressure grows the model,
+    sustained idleness shrinks it back to min_replicas."""
+    fleet, ctrl = _stack(param_store, n_nodes=3, min_replicas=1,
+                         max_replicas=3, fill=False)
+    acfg = ctrl.cfg.autoscale
+    acfg.sustain_ticks, acfg.cooldown_ticks = 2, 2
+    acfg.idle_sustain_ticks, acfg.down_cooldown_ticks = 5, 2
+    gw = Gateway(ctrl)
+    gw.start(RuntimeConfig(tick_interval_s=0.01))
+    try:
+        handles = [gw.submit(MODEL, [1, 2, (i % 5) + 1],
+                             SamplingParams(max_tokens=10))
+                   for i in range(16)]
+        for h in handles:
+            assert h.result(timeout_s=120) is not None
+        deadline = time.monotonic() + 60
+        while ctrl.scale_ups < 1 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert ctrl.scale_ups >= 1          # grew under pressure
+        while (len(ctrl.replicas.for_model(MODEL)) > 1
+               and time.monotonic() < deadline):
+            time.sleep(0.01)                # idle: shrink back
+        assert len(ctrl.replicas.for_model(MODEL)) == 1
+        assert ctrl.scale_downs >= 1
+        assert ctrl.bus.of_kind("autoscaled_down")
+        # the survivor still serves
+        assert gw.generate(MODEL, [7], SamplingParams(max_tokens=2),
+                           timeout_s=60).ok
+    finally:
+        assert gw.stop(timeout_s=60) is True
 
 
 # -------------------- threaded soak -------------------------------- #
