@@ -1,12 +1,14 @@
 """Soft bench regression gate for CI.
 
-Compares deterministic dispatch-discipline counters from a fresh
-``BENCH_serving.json`` against the checked-in
-``benchmarks/baseline_serving.json``: the job fails when
-``dispatches_per_token`` or ``host_syncs_per_token`` regresses more than
-the budget (default 20%) for any fused-K variant.  Wall-clock metrics
-(tok/s, step percentiles) are machine-dependent and stay informational —
-they are printed but never gate.
+Compares deterministic counters from a fresh ``BENCH_serving.json``
+against the checked-in ``benchmarks/baseline_serving.json``: the job
+fails when ``dispatches_per_token`` or ``host_syncs_per_token`` (lower is
+better) regresses more than the budget (default 20%) for any fused-K
+variant, or when the paged study's ``kv_page_utilization`` (higher is
+better — the fraction of KV-pool tokens holding live cache entries)
+drops more than the budget below baseline.  Wall-clock metrics (tok/s,
+step percentiles) are machine-dependent and stay informational — they
+are printed but never gate.
 
 Usage:  python benchmarks/check_regression.py \
             [BENCH_serving.json] [benchmarks/baseline_serving.json]
@@ -51,6 +53,32 @@ def main(argv):
         print(f"[info] fused.{variant}.tok_per_s: "
               f"current={cur.get('tok_per_s', 0.0):.1f} "
               f"baseline={base.get('tok_per_s', 0.0):.1f}")
+
+    # paged KV study: utilization gates (higher is better); occupancy
+    # and preemptions are printed for the record
+    base_paged = baseline.get("paged", {}).get("paged")
+    cur_paged = current.get("paged", {}).get("paged")
+    if base_paged is not None:
+        if cur_paged is None:
+            failures.append(f"paged study missing from {current_path}")
+        else:
+            b = base_paged["kv_page_utilization"]
+            c = cur_paged["kv_page_utilization"]
+            limit = b * (1 - BUDGET)
+            status = "FAIL" if c < limit else "ok"
+            print(f"[{status}] paged.kv_page_utilization: "
+                  f"current={c:.6f} baseline={b:.6f} "
+                  f"(floor={limit:.6f})")
+            if c < limit:
+                failures.append(
+                    f"paged.kv_page_utilization regressed "
+                    f"{(1 - c / b) * 100:.1f}% (> {BUDGET * 100:.0f}%)")
+            print(f"[info] paged: peak_active="
+                  f"{cur_paged.get('peak_active_slots')} "
+                  f"(contiguous="
+                  f"{current['paged']['contiguous']['peak_active_slots']})"
+                  f" preemptions={cur_paged.get('preemptions')} "
+                  f"tok_per_s={cur_paged.get('tok_per_s', 0):.1f}")
 
     rt = current.get("runtime")
     if rt is not None:

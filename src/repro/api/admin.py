@@ -30,6 +30,14 @@ class InstanceSnapshot:
     bytes: int
     load: float
     alive: bool
+    # paged KV pool occupancy (real engines; accounted replicas report
+    # their configured budget with zero occupancy)
+    page_size: int = 0
+    kv_pages: int = 0
+    pages_in_use: int = 0
+    page_occupancy: float = 0.0
+    page_fragmentation: float = 0.0
+    preemptions: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +71,8 @@ class TenantSnapshot:
     admitted: int
     rate_limited: int
     tokens_charged: int
+    weight: float = 1.0            # DWRR fair-queuing share
+    refunds: int = 0               # cancelled-while-queued give-backs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,7 +105,12 @@ class FleetSnapshot:
                     "hbm_used": n.hbm_used,
                     "hbm_budget": n.hbm_budget,
                     "instances": [{"model": i.model,
-                                   "quantize": i.quantize}
+                                   "quantize": i.quantize,
+                                   "kv_pages": i.kv_pages,
+                                   "pages_in_use": i.pages_in_use,
+                                   "page_occupancy": i.page_occupancy,
+                                   "page_fragmentation":
+                                       i.page_fragmentation}
                                   for i in n.instances],
                 } for n in self.nodes},
             "models": {m.name: m.replicas for m in self.models},
@@ -103,9 +118,11 @@ class FleetSnapshot:
             "tenants": {
                 t.tenant: {"requests_per_s": t.requests_per_s,
                            "tokens_per_s": t.tokens_per_s,
+                           "weight": t.weight,
                            "admitted": t.admitted,
                            "rate_limited": t.rate_limited,
-                           "tokens_charged": t.tokens_charged}
+                           "tokens_charged": t.tokens_charged,
+                           "refunds": t.refunds}
                 for t in self.tenants},
             "last_update": self.last_update,
         }
@@ -142,13 +159,32 @@ class AdminAPI:
             if alive:
                 for r in c.replicas.on_node(nid):
                     inst = node.instances.get(r.key.instance_id)
+                    pages = {}
+                    if inst is not None:
+                        if inst.engine is not None:
+                            # instance lock: page_stats iterates pool
+                            # dicts a pump thread mutates mid-step
+                            with inst.lock:
+                                ps = inst.engine.pool.page_stats()
+                            frag = ps["page_fragmentation"]
+                            pages = dict(
+                                page_size=int(ps["page_size"]),
+                                kv_pages=int(ps["kv_pages"]),
+                                pages_in_use=int(ps["pages_in_use"]),
+                                page_occupancy=ps["page_occupancy"],
+                                page_fragmentation=frag,
+                                preemptions=int(ps["preemptions"]))
+                        else:
+                            pages = dict(page_size=inst.page_size,
+                                         kv_pages=inst.kv_pages)
                     instances.append(InstanceSnapshot(
                         instance_id=r.key.instance_id,
                         model=r.model_name, quantize=r.quantize,
                         n_slots=r.n_slots, max_len=r.max_len,
                         bytes=r.bytes,
                         load=inst.load if inst is not None else 0.0,
-                        alive=inst.alive if inst is not None else False))
+                        alive=inst.alive if inst is not None else False,
+                        **pages))
             nodes.append(NodeSnapshot(
                 node_id=nid,
                 klass=node.klass.name if node else "?",
@@ -172,7 +208,9 @@ class AdminAPI:
                 tokens_per_s=quota.tokens_per_s if quota else 0.0,
                 admitted=usage.admitted,
                 rate_limited=usage.rate_limited,
-                tokens_charged=usage.tokens_charged))
+                tokens_charged=usage.tokens_charged,
+                weight=quota.weight if quota else 1.0,
+                refunds=usage.refunds))
         return FleetSnapshot(
             connected=sum(1 for n in nodes if n.alive),
             total=len(nodes), nodes=tuple(nodes), models=models,
@@ -247,18 +285,21 @@ class AdminAPI:
     def set_tenant_quota(self, tenant: str,
                          quota: Optional[TenantQuota] = None, *,
                          requests_per_s: float = 0.0,
-                         tokens_per_s: float = 0.0) -> TenantQuota:
-        """Install per-tenant rate limits, enforced by the frontend at
-        admission (`ErrorCode.RATE_LIMITED` rejections).  Pass a
-        `TenantQuota` or the rate shorthands; quotas show up in
-        `FleetSnapshot.tenants`."""
+                         tokens_per_s: float = 0.0,
+                         weight: float = 1.0) -> TenantQuota:
+        """Install per-tenant rate limits and the fair-queuing weight,
+        enforced by the frontend at admission (`ErrorCode.RATE_LIMITED`
+        rejections) and inside every engine's DWRR scheduler
+        respectively.  Pass a `TenantQuota` or the shorthands; quotas
+        show up in `FleetSnapshot.tenants`."""
         if quota is None:
             quota = TenantQuota(requests_per_s=requests_per_s,
-                                tokens_per_s=tokens_per_s)
+                                tokens_per_s=tokens_per_s, weight=weight)
         self.c.frontend.tenants.set_quota(tenant, quota)
         self.c.bus.emit("tenant_quota_set", tenant=tenant,
                         requests_per_s=quota.requests_per_s,
-                        tokens_per_s=quota.tokens_per_s)
+                        tokens_per_s=quota.tokens_per_s,
+                        weight=quota.weight)
         return quota
 
     def remove_tenant_quota(self, tenant: str):

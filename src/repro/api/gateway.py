@@ -214,16 +214,33 @@ class GenerationHandle:
             self._wait_for_progress(deadline)
         return self._response
 
+    def _cancel_backend(self, req: Request):
+        """Abort `req` on its backend.  When it was still *queued* (not
+        occupying a slot), refund the tenant token-bucket charge for the
+        tokens it will now never generate — the bucket was debited the
+        full `max_tokens` at submit.  Tokens already generated (a
+        preempted-then-requeued request carries its output) stay
+        charged: that engine work was consumed and delivered."""
+        if not (req.node and req.replica):
+            return
+        node = self._gw.c.fleet.nodes.get(req.node)
+        if node is None:
+            return
+        verdict = node.cancel(int(req.replica), req.request_id)
+        if verdict == "queued":
+            unserved = req.sampling.max_tokens - len(req.output)
+            if unserved > 0:
+                self._gw.c.frontend.tenants.refund(req.tenant, unserved)
+
     def cancel(self) -> bool:
-        """Abort the request, freeing its engine slot.  Returns False if
-        already finished."""
+        """Abort the request, freeing its engine slot and pages.  Returns
+        False if already finished.  Cancelling a request that was still
+        queued refunds the unconsumed part of its tenant token-bucket
+        charge."""
         if self._done:
             return False
         req = self.internal
-        if req.node and req.replica:
-            node = self._gw.c.fleet.nodes.get(req.node)
-            if node is not None:
-                node.cancel(int(req.replica), req.request_id)
+        self._cancel_backend(req)
         req.cancelled = True
         with self._gw._stats_lock:
             self._gw.stats.cancelled += 1
@@ -239,10 +256,9 @@ class GenerationHandle:
             return
         with self._gw._stats_lock:
             self._gw.stats.timeouts += 1
-        if req.node and req.replica:
-            node = self._gw.c.fleet.nodes.get(req.node)
-            if node is not None:
-                node.cancel(int(req.replica), req.request_id)
+        # same refund semantics as cancel(): a request that timed out
+        # while still queued never consumed the capacity it was charged
+        self._cancel_backend(req)
         if req.finished_at is None:
             req.finish(error="wall-clock deadline exceeded",
                        code=CODE_TIMEOUT)

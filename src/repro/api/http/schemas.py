@@ -259,21 +259,26 @@ def sse_event(data: Union[Dict, str]) -> bytes:
 
 def completion_chunk(req_id: int, model: str, *, text: str = "",
                      token: Optional[int] = None, index: int = 0,
-                     finish_reason: Optional[str] = None
+                     finish_reason: Optional[str] = None,
+                     usage: Optional[Dict[str, int]] = None
                      ) -> Dict[str, Any]:
     choice: Dict[str, Any] = {"index": 0, "text": text,
                               "finish_reason": finish_reason}
     if token is not None:
         choice["token"] = token
         choice["token_index"] = index
-    return {"id": f"cmpl-{req_id}", "object": "text_completion.chunk",
+    body = {"id": f"cmpl-{req_id}", "object": "text_completion.chunk",
             "created": int(time.time()), "model": model,
             "choices": [choice]}
+    if usage is not None:            # OpenAI parity: final chunk only
+        body["usage"] = usage
+    return body
 
 
 def chat_chunk(req_id: int, model: str, *, role: Optional[str] = None,
                text: Optional[str] = None, token: Optional[int] = None,
-               index: int = 0, finish_reason: Optional[str] = None
+               index: int = 0, finish_reason: Optional[str] = None,
+               usage: Optional[Dict[str, int]] = None
                ) -> Dict[str, Any]:
     delta: Dict[str, Any] = {}
     if role is not None:
@@ -284,10 +289,13 @@ def chat_chunk(req_id: int, model: str, *, role: Optional[str] = None,
         delta["token"] = token
         delta["token_index"] = index
     choice = {"index": 0, "delta": delta, "finish_reason": finish_reason}
-    return {"id": f"chatcmpl-{req_id}",
+    body = {"id": f"chatcmpl-{req_id}",
             "object": "chat.completion.chunk",
             "created": int(time.time()), "model": model,
             "choices": [choice]}
+    if usage is not None:            # OpenAI parity: final chunk only
+        body["usage"] = usage
+    return body
 
 
 def stream_error_chunk(err: APIError) -> Dict[str, Any]:

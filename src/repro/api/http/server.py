@@ -317,7 +317,8 @@ class _Handler(BaseHTTPRequestHandler):
                 # surface as plain HTTP errors, not empty streams
                 if handle.done and handle.response.error is not None:
                     return self._send_error_body(handle.response.error)
-                return self._stream(handle, rid, model, kind, timeout_s)
+                return self._stream(handle, rid, model, kind, timeout_s,
+                                    n_prompt=len(prompt))
             resp = handle.result(timeout_s=timeout_s)
             if resp.error is not None:
                 return self._send_error_body(resp.error)
@@ -330,7 +331,7 @@ class _Handler(BaseHTTPRequestHandler):
             svc._untrack(rid)
 
     def _stream(self, handle: GenerationHandle, rid: int, model: str,
-                kind: str, timeout_s: float):
+                kind: str, timeout_s: float, n_prompt: int = 0):
         self._begin_sse(rid)
         try:
             if kind == "chat":
@@ -348,14 +349,18 @@ class _Handler(BaseHTTPRequestHandler):
                             rid, model, text=text, token=ev.token,
                             index=ev.index)
                 elif ev.type is StreamEventType.FINISH:
+                    usage = schemas._usage(n_prompt,
+                                           len(ev.response.tokens))
                     if kind == "chat":
                         chunk = schemas.chat_chunk(
                             rid, model,
-                            finish_reason=ev.response.finish_reason)
+                            finish_reason=ev.response.finish_reason,
+                            usage=usage)
                     else:
                         chunk = schemas.completion_chunk(
                             rid, model,
-                            finish_reason=ev.response.finish_reason)
+                            finish_reason=ev.response.finish_reason,
+                            usage=usage)
                 else:       # terminal structured failure mid-stream
                     chunk = schemas.stream_error_chunk(ev.error)
                 self._chunk(schemas.sse_event(chunk))

@@ -180,7 +180,7 @@ class ServingRuntime:
         c = gw.c
         out: Dict[str, ModelLoad] = {}
         for model in c.replicas.models():
-            depth, head_wait = 0, 0.0
+            depth, head_wait, page_pressure = 0, 0.0, 0.0
             for info in c.replicas.for_model(model):
                 node = c.fleet.nodes.get(info.key.node_id)
                 if node is None or not node.alive:
@@ -190,11 +190,18 @@ class ServingRuntime:
                     sched = inst.engine.scheduler
                     depth += sched.depth
                     head_wait = max(head_wait, sched.head_wait_s())
+                    # KV-page occupancy: a nearly-exhausted pool means
+                    # admitted work is about to preempt — VRAM pressure
+                    # the queue depth alone cannot see
+                    page_pressure = max(
+                        page_pressure,
+                        inst.engine.pool.page_occupancy())
             out[model] = ModelLoad(
                 queue_depth=depth,
                 inflight=gw.inflight(model),
                 replicas=len(c.frontend.healthy_replicas(model)),
-                max_head_wait_s=head_wait)
+                max_head_wait_s=head_wait,
+                page_pressure=page_pressure)
         return out
 
     def tick_once(self):

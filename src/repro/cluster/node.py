@@ -13,6 +13,7 @@ import dataclasses
 import itertools
 import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional
 
 import jax
@@ -29,16 +30,34 @@ _inst_ids = itertools.count()
 import functools
 
 
+def kv_pool_bytes(cfg: ArchConfig, n_slots: int, max_len: int,
+                  page_size: int = 0, kv_pages: int = 0) -> int:
+    """KV/state bytes one instance's cache pool occupies.  With a page
+    budget (`page_size` x `kv_pages`), the sequence-scaling KV term is
+    charged per *page*, not per worst-case `n_slots x max_len` strip —
+    the whole point of the paged pool; constant-size per-slot state
+    (recurrent/ssm, encoder cross-attention) still scales with slots."""
+    dense = cfg.cache_bytes(n_slots, max_len)
+    if not (page_size and kv_pages) or cfg.block == "xlstm":
+        return int(dense)
+    eff = max_len if cfg.swa_window == 0 else min(max_len, cfg.swa_window)
+    dense_kv = n_slots * eff * cfg.kv_bytes_per_token()
+    paged_kv = kv_pages * page_size * cfg.kv_bytes_per_token()
+    return int(dense - dense_kv + paged_kv)
+
+
 @functools.lru_cache(maxsize=4096)
 def instance_bytes(cfg: ArchConfig, quantize: str, n_slots: int,
-                   max_len: int) -> int:
-    """Exact HBM bytes one instance occupies: weights at rest + KV pool.
-    This is the quantity placement charges — the paper's 'model capacity'
-    panel (VRAM required per instance).  Cached: placement calls this per
+                   max_len: int, page_size: int = 0,
+                   kv_pages: int = 0) -> int:
+    """Exact HBM bytes one instance occupies: weights at rest + KV pool
+    (page-budget-sized when `page_size`/`kv_pages` are given).  This is
+    the quantity placement charges — the paper's 'model capacity' panel
+    (VRAM required per instance).  Cached: placement calls this per
     (bin x commit) across thousand-node fleets."""
     wdt = {"": cfg.dtype, "int8": "int8", "int4": "int4"}[quantize]
     w = cfg.param_bytes(wdt)
-    kv = cfg.cache_bytes(n_slots, max_len)
+    kv = kv_pool_bytes(cfg, n_slots, max_len, page_size, kv_pages)
     return int(w + kv)
 
 
@@ -52,8 +71,15 @@ class Instance:
     max_len: int
     bytes: int
     engine: Optional[InferenceEngine] = None     # None => accounted mode
+    page_size: int = 0
+    kv_pages: int = 0
     # accounted-mode synthetic state
     sim_active: int = 0
+    # per-instance step lock: the sharded pump executor steps instances
+    # concurrently, so engine mutation (step/cancel/fail/retire) is
+    # serialized here instead of on the whole-node lock
+    lock: threading.RLock = dataclasses.field(
+        default_factory=threading.RLock, repr=False, compare=False)
 
     @property
     def alive(self) -> bool:
@@ -74,14 +100,21 @@ class BackendNode:
         self._alive = True
         self._seed = seed
         self.last_heartbeat = time.monotonic()
-        # `lock` serializes engine mutation (step / cancel / fail /
-        # deploy); `work_cv` is a *separate* light lock so submitters can
-        # wake this node's pump thread without contending on a running
-        # step — and, crucially, so a pump thread that re-routes a dying
-        # request to another node mid-step never waits on that node's big
-        # lock (no lock-ordering cycle between nodes).
+        # `lock` guards node structure (the instances map, alive flag);
+        # engine mutation is serialized per-instance on `Instance.lock`
+        # (always acquired *after* the node lock, never before — no
+        # ordering cycle).  `work_cv` is a *separate* light lock so
+        # submitters can wake this node's pump thread without contending
+        # on a running step — and, crucially, so a pump thread that
+        # re-routes a dying request to another node mid-step never waits
+        # on that node's big lock.
         self.lock = threading.RLock()
         self.work_cv = threading.Condition(threading.Lock())
+        # sharded executor: created lazily the first time this node pumps
+        # more than one live engine, so multi-instance nodes overlap
+        # their fused-decode dispatches instead of stepping serially
+        self._executor: Optional[ThreadPoolExecutor] = None
+        self._executor_size = 0
 
     # ------------------------------------------------------------- #
     @property
@@ -136,11 +169,19 @@ class BackendNode:
     # ------------------------------------------------------------- #
     def deploy(self, cfg: ArchConfig, *, quantize: str = "",
                n_slots: int = 4, max_len: int = 128,
-               real: bool = True, decode_block: int = 4) -> Instance:
+               real: bool = True, decode_block: int = 4,
+               page_size: int = 16, kv_pages: int = 0,
+               paged: bool = True) -> Instance:
         """Launch one model instance (the controller's startup-script
-        analogue).  Raises MemoryError when it would not fit — placement
-        should never let that happen (property-tested)."""
-        need = instance_bytes(cfg, quantize, n_slots, max_len)
+        analogue).  `kv_pages` sizes the paged KV pool (0 => the
+        contiguous-equivalent budget); HBM is charged by page budget, not
+        worst-case strips.  Raises MemoryError when it would not fit —
+        placement should never let that happen (property-tested)."""
+        pages_per_slot = -(-max_len // page_size)
+        eff_pages = kv_pages if (paged and cfg.block != "xlstm") \
+            and kv_pages else n_slots * pages_per_slot
+        need = instance_bytes(cfg, quantize, n_slots, max_len,
+                              page_size, eff_pages)
         if need > self.hbm_free:
             raise MemoryError(
                 f"{self.node_id}: {cfg.name} needs {need/2**30:.2f} GiB, "
@@ -155,9 +196,12 @@ class BackendNode:
                     cfg, params,
                     EngineConfig(n_slots=n_slots, max_len=max_len,
                                  quantize=quantize, seed=self._seed,
-                                 decode_block=decode_block))
+                                 decode_block=decode_block,
+                                 page_size=page_size, kv_pages=kv_pages,
+                                 paged=paged))
         inst = Instance(next(_inst_ids), cfg.name, cfg, quantize, n_slots,
-                        max_len, need, engine)
+                        max_len, need, engine, page_size=page_size,
+                        kv_pages=eff_pages)
         with self.lock:
             self.instances[inst.instance_id] = inst
         return inst
@@ -200,14 +244,17 @@ class BackendNode:
         inst.sim_active -= 1
         return True
 
-    def cancel(self, instance_id: int, request_id: int) -> bool:
-        """Abort a request on one of this node's engines (frees its slot).
-        Takes the node lock: cancellation rewrites per-slot device state
-        and must not interleave with a fused-decode step."""
+    def cancel(self, instance_id: int, request_id: int):
+        """Abort a request on one of this node's engines (frees its slot
+        and pages).  Takes the instance lock: cancellation rewrites
+        per-slot device state and must not interleave with that engine's
+        fused-decode step.  Returns the engine's verdict — "queued"
+        (never admitted; the gateway refunds the tenant's token-bucket
+        charge), "active", or False."""
         inst = self.instances.get(instance_id)
         if inst is None or inst.engine is None:
             return False
-        with self.lock:
+        with inst.lock:
             return inst.engine.cancel(request_id)
 
     # ------------------------------------------------------------- #
@@ -224,31 +271,67 @@ class BackendNode:
         with self.work_cv:
             self.work_cv.notify_all()
 
+    def _step_instance(self, inst: Instance, max_steps: int) -> int:
+        """Advance one engine under its own lock (the sharded executor's
+        unit of work)."""
+        emitted = 0
+        with inst.lock:
+            eng = inst.engine
+            if eng is None or not eng.alive:
+                return 0
+            for _ in range(max_steps):
+                if eng.slot_req or eng.scheduler.depth:
+                    try:
+                        emitted += eng.step()
+                    except EngineFailure:
+                        break            # failed under us mid-loop
+        return emitted
+
+    def _get_executor(self, n: int) -> ThreadPoolExecutor:
+        want = min(max(n, 1), 4)
+        if self._executor is not None and self._executor_size < want:
+            # the node grew (elastic scale-up): re-size so new instances
+            # actually overlap.  Safe: pump() waits on every future, so
+            # the old pool is idle here.
+            self._executor.shutdown(wait=False)
+            self._executor = None
+        if self._executor is None:
+            self._executor = ThreadPoolExecutor(
+                max_workers=want,
+                thread_name_prefix=f"step-{self.node_id}")
+            self._executor_size = want
+        return self._executor
+
     def pump(self, max_steps: int = 1) -> int:
-        """Advance all engines (the node's serving loop).  Returns decode
-        tokens emitted, so pump loops can tell progress from idling."""
+        """Advance all engines (the node's serving loop).  Multi-instance
+        nodes step their engines concurrently through a small per-node
+        thread pool (one fused dispatch per instance overlaps on device);
+        single-instance nodes step inline, paying no executor overhead.
+        Returns decode tokens emitted, so pump loops can tell progress
+        from idling."""
         if not self._alive:
             return 0
-        emitted = 0
         with self.lock:
-            for inst in list(self.instances.values()):
-                if inst.engine and inst.engine.alive:
-                    for _ in range(max_steps):
-                        if inst.engine.slot_req or \
-                                inst.engine.scheduler.depth:
-                            try:
-                                emitted += inst.engine.step()
-                            except EngineFailure:
-                                break    # failed under us mid-loop
-        return emitted
+            insts = [i for i in self.instances.values()
+                     if i.engine is not None and i.engine.alive]
+        if not insts:
+            return 0
+        if len(insts) == 1:
+            return self._step_instance(insts[0], max_steps)
+        ex = self._get_executor(len(insts))
+        futs = [ex.submit(self._step_instance, i, max_steps)
+                for i in insts]
+        return sum(f.result() for f in futs)
 
     # ------------------------------------------------------------- #
     def fail(self):
         """Node-level outage (power/network loss)."""
         self._alive = False
         with self.lock:
-            for inst in list(self.instances.values()):
-                if inst.engine:
+            insts = list(self.instances.values())
+        for inst in insts:
+            if inst.engine:
+                with inst.lock:    # not mid-step on the sharded executor
                     inst.engine.fail()
         self.notify_work()         # unblock the pump thread promptly
 
@@ -258,4 +341,8 @@ class BackendNode:
         with self.lock:
             self._alive = True
             self.instances.clear()
+            if self._executor is not None:
+                self._executor.shutdown(wait=False)
+                self._executor = None
+                self._executor_size = 0
         self.last_heartbeat = time.monotonic()

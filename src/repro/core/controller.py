@@ -32,11 +32,13 @@ class AutoscaleConfig:
     workload fluctuations), in both directions.
 
     Scale-up: a model is "hot" when its backlog-per-replica exceeds
-    `queue_high` OR its oldest queued request has waited longer than
-    `head_wait_high_s` (a shallow-but-stale queue is still starvation);
-    `sustain_ticks` consecutive hot ticks place one more replica into
-    free VRAM, then `cooldown_ticks` of hysteresis before the next
-    growth step.
+    `queue_high`, OR its oldest queued request has waited longer than
+    `head_wait_high_s` (a shallow-but-stale queue is still starvation),
+    OR some replica's KV-page pool is nearly exhausted (`page_high`
+    occupancy — admitted work is about to preempt, so VRAM pressure is
+    real even when the queue looks shallow); `sustain_ticks` consecutive
+    hot ticks place one more replica into free VRAM, then
+    `cooldown_ticks` of hysteresis before the next growth step.
 
     Scale-down: a model is "idle" when it has zero backlog AND zero
     in-flight requests while holding more replicas than its demand's
@@ -48,6 +50,7 @@ class AutoscaleConfig:
     enabled: bool = True
     queue_high: float = 2.0        # queued requests per healthy replica
     head_wait_high_s: float = 2.0  # oldest-queued-request age threshold
+    page_high: float = 0.92        # KV-page occupancy pressure threshold
     sustain_ticks: int = 3
     cooldown_ticks: int = 10
     scale_down: bool = True
@@ -63,6 +66,7 @@ class ModelLoad:
     inflight: int = 0              # gateway-admitted, not yet settled
     replicas: int = 0              # healthy replicas serving the model
     max_head_wait_s: float = 0.0   # oldest queued request, any replica
+    page_pressure: float = 0.0     # max KV-page occupancy, any replica
 
 
 @dataclasses.dataclass
@@ -138,11 +142,18 @@ class SDAIController:
             try:
                 inst = node.deploy(cfg, quantize=a.quantize,
                                    n_slots=a.n_slots, max_len=a.max_len,
-                                   real=real)
+                                   real=real, page_size=a.page_size,
+                                   kv_pages=a.kv_pages)
             except MemoryError as e:      # placement invariant violated
                 self.bus.emit("deploy_failed", node=a.node_id,
                               model=a.model_name, error=str(e))
                 continue
+            if inst.engine is not None:
+                # tenant fair-queuing weights flow from the frontend's
+                # quota registry straight into the engine's DWRR
+                # scheduler — live lookups, no broadcast needed
+                inst.engine.scheduler.weight_of = \
+                    self.frontend.tenants.weight
             key = ReplicaKey(a.node_id, inst.instance_id)
             self.replicas.add(ReplicaInfo(key, a.model_name, a.quantize,
                                           a.n_slots, a.max_len, a.bytes))
@@ -212,7 +223,8 @@ class SDAIController:
         for model, ml in load.items():
             replicas = max(ml.replicas, 1)
             hot = (ml.queue_depth / replicas >= acfg.queue_high
-                   or ml.max_head_wait_s >= acfg.head_wait_high_s)
+                   or ml.max_head_wait_s >= acfg.head_wait_high_s
+                   or ml.page_pressure >= acfg.page_high)
             idle = ml.queue_depth == 0 and ml.inflight == 0
             # ---- scale-up under sustained pressure ------------------ #
             cd = self._scale_cooldown.get(model, 0)
@@ -287,19 +299,22 @@ class SDAIController:
             node = self.fleet.nodes.get(info.key.node_id)
             if node is None or not node.alive:
                 continue
-            with node.lock:       # don't retire an engine mid-step
+            with node.lock:
                 inst = node.instances.get(info.key.instance_id)
-                if self._instance_busy(inst):
+                if inst is None:
                     continue
-                # node.submit is deliberately lock-free, so a request
-                # can still slip into the scheduler between the busy
-                # check and undeploy: fail the engine first, so any
-                # such request finishes with ENGINE_FAILED and the
-                # gateway's pre-token retry re-routes it — never
-                # silently stranded
-                if inst is not None and inst.engine is not None:
-                    inst.engine.fail()
-                node.undeploy(info.key.instance_id)
+                with inst.lock:   # don't retire an engine mid-step
+                    if self._instance_busy(inst):
+                        continue
+                    # node.submit is deliberately lock-free, so a request
+                    # can still slip into the scheduler between the busy
+                    # check and undeploy: fail the engine first, so any
+                    # such request finishes with ENGINE_FAILED and the
+                    # gateway's pre-token retry re-routes it — never
+                    # silently stranded
+                    if inst.engine is not None:
+                        inst.engine.fail()
+                    node.undeploy(info.key.instance_id)
             self.replicas.remove(info.key)
             self.scale_downs += 1
             self.bus.emit("autoscaled_down", model=model,
@@ -353,10 +368,11 @@ class SDAIController:
         for info in self.replicas.for_model(model)[keep:]:
             node = self.fleet.nodes.get(info.key.node_id)
             if node is not None:
-                with node.lock:       # don't fail an engine mid-step
+                with node.lock:
                     inst = node.instances.get(info.key.instance_id)
                     if inst is not None and inst.engine is not None:
-                        inst.engine.fail()
+                        with inst.lock:   # not mid-step on the executor
+                            inst.engine.fail()
                     node.undeploy(info.key.instance_id)
             self.replicas.remove(info.key)
             removed += 1

@@ -47,11 +47,16 @@ class FrontendStats:
 class TenantQuota:
     """Per-tenant rate limits.  0 disables that dimension.  Bursts
     default to one second's worth of rate (min 1), so a quota of
-    5 req/s admits 5 back-to-back then refills continuously."""
+    5 req/s admits 5 back-to-back then refills continuously.
+
+    `weight` is the tenant's fair-queuing share inside every engine's
+    DWRR scheduler: under contention a weight-3 tenant is served ~3x the
+    tokens of a weight-1 tenant.  It does not gate admission."""
     requests_per_s: float = 0.0
     tokens_per_s: float = 0.0
     burst_requests: float = 0.0
     burst_tokens: float = 0.0
+    weight: float = 1.0
 
     def request_burst(self) -> float:
         return self.burst_requests or max(self.requests_per_s, 1.0)
@@ -65,6 +70,7 @@ class TenantUsage:
     admitted: int = 0
     rate_limited: int = 0
     tokens_charged: int = 0
+    refunds: int = 0           # cancelled-before-admission give-backs
 
 
 class _TokenBucket:
@@ -147,6 +153,33 @@ class TenantLimiter:
             usage.admitted += 1
             usage.tokens_charged += projected_tokens
             return None
+
+    def refund(self, tenant: str, projected_tokens: int):
+        """Give back one request + its projected token charge — the
+        request was cancelled while still queued, so it never consumed
+        engine capacity.  Buckets refill up to their burst; usage books
+        the refund so dashboards stay honest."""
+        with self._lock:
+            if tenant not in self.quotas:
+                return
+            usage = self.usage.setdefault(tenant, TenantUsage())
+            rb = self._req_buckets.get(tenant)
+            tb = self._tok_buckets.get(tenant)
+            if rb is not None:
+                rb.level = min(rb.burst, rb.level + 1.0)
+            if tb is not None:
+                tb.level = min(tb.burst,
+                               tb.level + float(projected_tokens))
+            usage.tokens_charged -= projected_tokens
+            usage.refunds += 1
+
+    def weight(self, tenant: str) -> float:
+        """The tenant's DWRR fair-queuing weight (1.0 when no quota is
+        installed).  Thread-safe: engine schedulers call this on the hot
+        admission path."""
+        with self._lock:
+            q = self.quotas.get(tenant)
+            return q.weight if q is not None else 1.0
 
     def snapshot(self) -> Dict[str, Dict]:
         """tenant -> {quota, usage} for the admin surface."""

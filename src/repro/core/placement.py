@@ -36,14 +36,27 @@ class ModelDemand:
     max_len: int = 2048
     allow_quant: bool = True
     weight: float = 1.0                     # expected traffic share
+    # paged KV pool sizing: placement charges the *page budget*, not the
+    # worst-case n_slots x max_len strips.  kv_page_frac < 1 oversubscribes
+    # slots against pages (engines preempt on exhaustion) — the VRAM win.
+    page_size: int = 16
+    kv_page_frac: float = 1.0
 
     @property
     def replica_cap(self) -> int:
         return self.max_replicas or (self.min_replicas + 2)
 
+    @property
+    def kv_pages(self) -> int:
+        """Per-replica page budget: `kv_page_frac` of the contiguous-
+        equivalent pool, floored at one full sequence."""
+        per_slot = -(-self.max_len // self.page_size)
+        full = self.n_slots * per_slot
+        return max(int(full * self.kv_page_frac), per_slot)
+
     def bytes_at(self, quantize: str) -> int:
         return instance_bytes(self.cfg, quantize, self.n_slots,
-                              self.max_len)
+                              self.max_len, self.page_size, self.kv_pages)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +67,8 @@ class Assignment:
     n_slots: int
     max_len: int
     bytes: int
+    page_size: int = 16
+    kv_pages: int = 0          # 0 => contiguous-equivalent budget
 
 
 @dataclasses.dataclass
@@ -117,7 +132,8 @@ def place(nodes: Dict[str, Tuple[int, bool]],
         b.free -= need
         b.hosted[d.cfg.name] = b.hosted.get(d.cfg.name, 0) + 1
         plan.assignments.append(Assignment(
-            b.node_id, d.cfg.name, prec, d.n_slots, d.max_len, need))
+            b.node_id, d.cfg.name, prec, d.n_slots, d.max_len, need,
+            page_size=d.page_size, kv_pages=d.kv_pages))
 
     # phase 1: min replicas, biggest models first (FFD)
     order = sorted(demands, key=lambda d: -d.bytes_at(""))

@@ -1,8 +1,9 @@
 from repro.serving.engine import InferenceEngine, EngineConfig, EngineFailure
+from repro.serving.kv_cache import PagedKVPool, SlotPool
 from repro.serving.request import Request, RequestState
 from repro.serving.sampler import SamplingParams, sample_batched
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
 __all__ = ["InferenceEngine", "EngineConfig", "EngineFailure", "Request",
            "RequestState", "SamplingParams", "sample_batched", "Scheduler",
-           "SchedulerConfig"]
+           "SchedulerConfig", "PagedKVPool", "SlotPool"]

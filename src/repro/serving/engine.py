@@ -7,10 +7,10 @@ dispatches:
 
 * **bucketed prefill** — queued prompts are padded to power-of-two length
   buckets and admitted as one batch per bucket; the jitted call runs the
-  forward, scatters every row's cache into its slot, samples the first
-  token per row, and updates the persistent per-slot state arrays — all on
-  device.  Distinct prompt lengths inside one bucket share a single trace
-  (`prefill_traces` counts compiles to prove it).
+  forward, scatters every row's cache into its pages (or slot strip),
+  samples the first token per row, and updates the persistent per-slot
+  state arrays — all on device.  Distinct prompt lengths inside one bucket
+  share a single trace (`prefill_traces` counts compiles to prove it).
 * **fused K-step decode** — a jitted `lax.scan` runs `decode_block`
   decode+sample steps per dispatch, carrying `(cache, last_tok, pos, key)`
   on device, applying per-slot temperature/top-k/top-p and an on-device
@@ -18,12 +18,26 @@ dispatches:
   mid-scan.  Exactly one blocking `device_get` brings back the
   `(K, n_slots)` token block plus emit/done flags.
 
+KV memory is **paged** (`EngineConfig.paged`, default on): the physical
+cache is a flat pool of `page_size`-token pages and each slot owns a page
+table (`serving.kv_cache.PagedKVPool`).  The fused decode gathers every
+slot's logical view through the page table once per dispatch and scatters
+it back once — zero extra host syncs — while bucketed prefill lands rows
+directly in their pages.  Slots may be *oversubscribed* against the page
+budget (`kv_pages` below the contiguous-equivalent `n_slots x
+pages_per_slot`): admission is page-aware via the two-level DWRR
+scheduler, page tables grow at decode-block boundaries, and on page
+exhaustion the engine preempts the lowest-deficit tenant's slot — the
+victim re-enters the front of its tenant queue and later *resumes* from
+its full context (prompt + generated so far) without re-emitting a token.
+`paged=False` restores the contiguous per-slot strips (every slot
+reserves its full `max_len` worth of pages up front) for apples-to-apples
+studies.
+
 Per-slot sampling params live in persistent device arrays written only on
 admission/release/cancel — no host->device uploads or `.at[].set()` loops
 inside the hot path.  Weights may be held quantized (int8/int4) at rest
-and dequantized on-chip per step.  A fixed slot pool gives O(1) admission,
-batched decode over all active slots, and exact byte accounting for the
-SDAI controller's VRAM-aware placement.
+and dequantized on-chip per step.
 """
 from __future__ import annotations
 
@@ -38,9 +52,11 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import build
 from repro.serving import quantization as q_lib
-from repro.serving.kv_cache import SlotPool, cache_bytes, write_slots
+from repro.serving.kv_cache import (PagedKVPool, cache_bytes, gather_pages,
+                                    scatter_pages, scatter_prefill_rows,
+                                    split_paged, write_slots)
 from repro.serving.request import (CODE_ENGINE_FAILED, CODE_INVALID_REQUEST,
-                                   CODE_OVERLOADED, Request, RequestState)
+                                   Request, RequestState)
 from repro.serving.sampler import sample_batched
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
@@ -55,6 +71,9 @@ class EngineConfig:
     seed: int = 0
     decode_block: int = 4         # K decode steps fused per dispatch
     prefill_bucket_min: int = 8   # smallest power-of-two prompt bucket
+    page_size: int = 16           # KV tokens per physical page
+    kv_pages: int = 0             # page budget; 0 => n_slots full strips
+    paged: bool = True            # False => contiguous per-slot strips
 
 
 class EngineFailure(RuntimeError):
@@ -77,7 +96,6 @@ class InferenceEngine:
         self.ecfg = engine_cfg
         self.model = build(cfg)
         self.scheduler = scheduler or Scheduler(SchedulerConfig())
-        self.pool = SlotPool(engine_cfg.n_slots, engine_cfg.max_len)
         self._dead = False
         self._key = jax.random.PRNGKey(engine_cfg.seed)
         # recurrent families fold right-pads into their state, so they
@@ -90,6 +108,15 @@ class InferenceEngine:
         # of cache positions and must stop decoding at max_len
         self._pos_limit = (engine_cfg.max_len if cfg.block != "xlstm"
                            else 2 ** 30)
+        # xlstm state has no sequence axis: nothing to page
+        self._paged = engine_cfg.paged and cfg.block != "xlstm"
+        self.pool = PagedKVPool(engine_cfg.n_slots, engine_cfg.max_len,
+                                page_size=engine_cfg.page_size,
+                                n_pages=(engine_cfg.kv_pages
+                                         if self._paged else 0))
+        # page-aware admission: the scheduler charges each queued request
+        # its projected page cost against the engine's free page budget
+        self.scheduler.pages_for = self._pages_for
 
         if engine_cfg.quantize:
             bits = 8 if engine_cfg.quantize == "int8" else 4
@@ -100,8 +127,7 @@ class InferenceEngine:
             self._dequant = lambda p: p
 
         src_len = engine_cfg.max_len if cfg.is_encdec else 0
-        self.cache = self.model.init_cache(
-            engine_cfg.n_slots, engine_cfg.max_len, src_len=src_len)
+        self.cache = self._init_cache(src_len)
         self.slot_req: Dict[int, Request] = {}
         # persistent per-slot device state: touched only by jitted
         # admission / fused-decode calls and the (rare) cancel path
@@ -122,25 +148,65 @@ class InferenceEngine:
         self.host_syncs = 0       # blocking device->host transfers
         self.prefill_traces = 0   # compile-cache counter: bucketed prefill
         self.decode_traces = 0    # compiles once per decode_block
+        self.preemptions = 0      # slots evicted on page exhaustion
         self._build_steps()
+
+    # ------------------------------------------------------------- #
+    def _init_cache(self, src_len: int):
+        """Physical cache: paged leaves live as a flat (layers, n_pages,
+        page_size, ...) pool; constant-size leaves (ssm states, encoder
+        cross-attention KV, the whole xlstm state) stay slot-resident."""
+        ns, ml = self.ecfg.n_slots, self.ecfg.max_len
+        if not self._paged:
+            return self.model.init_cache(ns, ml, src_len=src_len)
+        spec = jax.eval_shape(
+            lambda: self.model.init_cache(ns, ml, src_len=src_len))
+        paged, resident = split_paged(spec)
+        cache = {name: jnp.zeros(s.shape, s.dtype)
+                 for name, s in resident.items()}
+        for name, s in paged.items():
+            cache[name] = jnp.zeros(
+                (s.shape[0], self.pool.n_pages, self.pool.page_size)
+                + s.shape[3:], s.dtype)
+        return cache
+
+    def _pages_for(self, req: Request) -> int:
+        """Projected page cost of admitting `req` now: its full effective
+        context (prompt + already-generated resume tokens + prefix) plus
+        one position of decode headroom."""
+        eff = (len(req.prompt) + len(req.output) + self._prefix_tokens)
+        if not self._paged:
+            return self.pool.pages_per_slot
+        return self.pool.pages_for_tokens(min(eff + 1, self.ecfg.max_len))
 
     # ------------------------------------------------------------- #
     def _build_steps(self):
         model, ecfg = self.model, self.ecfg
+        paged = self._paged
 
         def prefill_admit(params, cache, last_tok, pos, active, remaining,
                           temps, top_ks, top_ps, eos_ids, key,
-                          tokens, lengths, slots, r_temps, r_topk, r_topp,
-                          r_eos, r_budget, extra):
+                          tokens, lengths, slots, row_pages,
+                          r_temps, r_topk, r_topp, r_eos, r_budget, extra):
             # Python side effect fires at trace time only: counts compiles
             self.prefill_traces += 1
             p = self._dequant(params)
             kw = dict(extra)
             if self._supports_bucket:
                 kw["lengths"] = lengths
-            logits, rows_cache, pos1 = model.prefill(
-                p, tokens, cache_len=ecfg.max_len, **kw)
-            cache = write_slots(cache, rows_cache, slots)
+            if paged:
+                # rows at their true (bucketed) length; pages don't need
+                # max_len-wide rows
+                logits, rows_cache, pos1 = model.prefill(p, tokens, **kw)
+                rows_p, rows_r = split_paged(rows_cache)
+                pool_p, pool_r = split_paged(cache)
+                pool_p = scatter_prefill_rows(pool_p, rows_p, row_pages)
+                pool_r = write_slots(pool_r, rows_r, slots)
+                cache = {**pool_p, **pool_r}
+            else:
+                logits, rows_cache, pos1 = model.prefill(
+                    p, tokens, cache_len=ecfg.max_len, **kw)
+                cache = write_slots(cache, rows_cache, slots)
             key, sk = jax.random.split(key)
             first = sample_batched(logits, sk, r_temps, r_topk, r_topp)
             done0 = ((r_budget <= 1) | ((r_eos >= 0) & (first == r_eos))
@@ -165,13 +231,20 @@ class InferenceEngine:
             # "full":   per-slot top-k/top-p filters too.
             def fused_decode(params, cache, last_tok, pos, active,
                              remaining, temps, top_ks, top_ps, eos_ids,
-                             key):
+                             key, page_table):
                 self.decode_traces += 1
                 p = self._dequant(params)
+                if paged:
+                    pool_p, pool_r = split_paged(cache)
+                    # one gather per dispatch materializes every slot's
+                    # logical view through its page table
+                    view = {**gather_pages(pool_p, page_table), **pool_r}
+                else:
+                    view = cache
 
                 def body(carry, _):
-                    cache, last_tok, pos, active, remaining, key = carry
-                    logits, cache = model.decode(p, cache, last_tok, pos)
+                    view, last_tok, pos, active, remaining, key = carry
+                    logits, view = model.decode(p, view, last_tok, pos)
                     if mode == "greedy":
                         sampled = jnp.argmax(logits, axis=-1) \
                             .astype(jnp.int32)
@@ -191,21 +264,30 @@ class InferenceEngine:
                                      # out of cache positions: the next
                                      # write would fall past max_len
                                      | (pos >= self._pos_limit))
-                    carry = (cache, tok, pos, active & ~done, remaining,
+                    carry = (view, tok, pos, active & ~done, remaining,
                              key)
                     return carry, (tok, emit, done)
 
-                init = (cache, last_tok, pos, active, remaining, key)
+                init = (view, last_tok, pos, active, remaining, key)
                 carry, (toks, emits, dones) = jax.lax.scan(
                     body, init, None, length=ecfg.decode_block)
-                cache, last_tok, pos, active, remaining, key = carry
+                view, last_tok, pos, active, remaining, key = carry
+                if paged:
+                    view_p, view_r = split_paged(view)
+                    # one scatter per dispatch lands the block's writes
+                    # back in the physical page pool
+                    cache = {**scatter_pages(pool_p, view_p, page_table),
+                             **view_r}
+                else:
+                    cache = view
                 return (cache, last_tok, pos, active, remaining, key,
                         toks, emits, dones)
             return fused_decode
 
         def clear_slots(last_tok, pos, active, remaining, temps, slots):
-            """Release/cancel: wipe per-slot device state so a freed slot
-            can never be decoded or sampled with stale values."""
+            """Release/cancel/preempt: wipe per-slot device state so a
+            freed slot can never be decoded or sampled with stale
+            values."""
             last_tok = last_tok.at[slots].set(0, mode="drop")
             pos = pos.at[slots].set(0, mode="drop")
             active = active.at[slots].set(False, mode="drop")
@@ -276,18 +358,21 @@ class InferenceEngine:
         for req in doomed:
             req.finish(error="engine crashed", code=CODE_ENGINE_FAILED)
 
-    def cancel(self, request_id: int) -> bool:
-        """Abort a queued or in-flight request, freeing its slot.  Takes
-        effect at the next dispatch boundary: the current fused block (if
-        any) has already been emitted."""
+    def cancel(self, request_id: int):
+        """Abort a queued or in-flight request, freeing its slot and
+        pages.  Takes effect at the next dispatch boundary: the current
+        fused block (if any) has already been emitted.  Returns "queued"
+        when the request had never been admitted to a slot (the caller
+        refunds its tenant token-bucket charge), "active" when it held a
+        slot, False when unknown."""
         if self.scheduler.cancel(request_id):
-            return True
+            return "queued"
         for slot, req in list(self.slot_req.items()):
             if req.request_id == request_id:
                 del self.slot_req[slot]
                 self.pool.release(slot)
                 self._release_device_slot(slot)
-                return True
+                return "active"
         return False
 
     def _release_device_slot(self, slot: int):
@@ -331,50 +416,76 @@ class InferenceEngine:
         return emitted
 
     # ---- admissions: one bucketed batch prefill dispatch ---------- #
+    def _decode_page_debt(self) -> int:
+        """Pages the in-flight slots will need for their next decode
+        block — reserved out of the admission budget so a fresh admit
+        can't immediately starve running requests into preemption."""
+        if not self._paged:
+            return 0
+        debt = 0
+        for slot in self.slot_req:
+            target = min(self.pool.lengths[slot] + self.ecfg.decode_block,
+                         self.ecfg.max_len)
+            debt += max(self.pool.pages_for_tokens(target)
+                        - len(self.pool.slot_pages[slot]), 0)
+        return debt
+
     def _admit(self):
+        budget = max(len(self.pool.free_pages) - self._decode_page_debt(),
+                     0)
         group = self.scheduler.next_prefill_bucket(
-            len(self.pool.free), self._bucket_of)
+            len(self.pool.free_slots), self._bucket_of, free_pages=budget)
         admitted: List[Tuple[int, Request]] = []
         for req in group:
-            slot = self.pool.alloc(req.request_id, len(req.prompt))
-            if slot is None:                        # defensive; shouldn't
-                req.finish(error="no capacity",     # happen (free-count
-                           code=CODE_OVERLOADED)    # bounded above)
-                continue
+            eff = len(req.prompt) + len(req.output)
+            need = eff + self._prefix_tokens
+            slot = self.pool.alloc(
+                req.request_id, need,
+                reserve_tokens=0 if self._paged else self.ecfg.max_len)
+            if slot is None:                    # defensive; the admission
+                self.scheduler.requeue(req)     # budget above bounds the
+                continue                        # group — never drop it
             req.state = RequestState.PREFILLING
             admitted.append((slot, req))
         if not admitted:
             return
         ecfg = self.ecfg
-        bucket = self._bucket_of(max(len(r.prompt) for _, r in admitted))
+        bucket = self._bucket_of(max(len(r.prompt) + len(r.output)
+                                     for _, r in admitted))
+        s_tot = bucket + self._prefix_tokens
+        n_row_pages = self.pool.pages_for_tokens(s_tot)
         pad_n = _next_pow2(len(admitted))
         toks = np.zeros((pad_n, bucket), np.int32)
         lengths = np.ones((pad_n,), np.int32)
         slots = np.full((pad_n,), ecfg.n_slots, np.int32)  # OOB => drop
+        row_pages = np.full((pad_n, n_row_pages), self.pool.n_pages,
+                            np.int32)                      # OOB => drop
         r_temps = np.zeros((pad_n,), np.float32)
         r_topk = np.zeros((pad_n,), np.int32)
         r_topp = np.ones((pad_n,), np.float32)
         r_eos = np.full((pad_n,), -1, np.int32)
         r_budget = np.ones((pad_n,), np.int32)
         for i, (slot, req) in enumerate(admitted):
-            pl = len(req.prompt)
-            toks[i, :pl] = req.prompt
+            prompt = list(req.prompt) + list(req.output)   # resume ctx
+            pl = len(prompt)
+            toks[i, :pl] = prompt
             lengths[i] = pl
             slots[i] = slot
+            row_pages[i] = self.pool.row_pages(slot, n_row_pages)
             s = req.sampling
             r_temps[i] = s.temperature
             r_topk[i] = s.top_k if s.top_k > 0 else ecfg.top_k
             r_topp[i] = s.top_p if s.top_p < 1.0 else ecfg.top_p
             r_eos[i] = s.eos_id
-            r_budget[i] = s.max_tokens
+            r_budget[i] = s.max_tokens - len(req.output)
         extra = self._extra_inputs(pad_n)
         (self.cache, self.last_tok, self.pos, self.active, self.remaining,
          self.temps, self.top_ks, self.top_ps, self.eos_ids, self._key,
          first, done0) = self._prefill_admit(
             self.params, self.cache, self.last_tok, self.pos, self.active,
             self.remaining, self.temps, self.top_ks, self.top_ps,
-            self.eos_ids, self._key, toks, lengths, slots, r_temps,
-            r_topk, r_topp, r_eos, r_budget, extra)
+            self.eos_ids, self._key, toks, lengths, slots, row_pages,
+            r_temps, r_topk, r_topp, r_eos, r_budget, extra)
         self.dispatches += 1
         first_h, done_h = jax.device_get((first, done0))
         self.host_syncs += 1
@@ -402,14 +513,60 @@ class InferenceEngine:
             return "full"
         return "temp"
 
+    # ---- preemption: page exhaustion at a decode-block boundary --- #
+    def _pick_victim(self) -> Optional[int]:
+        """Preemption victim: the slot whose tenant holds the lowest DWRR
+        deficit (most recently over-served), breaking ties toward the
+        request with the least progress (cheapest resume)."""
+        if not self.slot_req:
+            return None
+        return min(self.slot_req.items(),
+                   key=lambda kv: (self.scheduler.deficit(kv[1].tenant),
+                                   len(kv[1].output), -kv[0]))[0]
+
+    def _preempt(self, slot: int):
+        """Evict `slot`: refund its pages, wipe its device state, and
+        requeue its request at the front of its tenant queue.  The
+        request keeps its emitted tokens and later resumes by
+        re-prefilling prompt + output with the remaining budget."""
+        req = self.slot_req.pop(slot)
+        self.pool.release(slot)
+        self.pool.preemptions += 1
+        self.preemptions += 1
+        self._release_device_slot(slot)
+        self.scheduler.requeue(req)
+
+    def _ensure_decode_pages(self):
+        """Grow every active slot's page table to cover the next fused
+        block.  On exhaustion, preempt lowest-deficit slots until the
+        growth fits (a sole survivor always fits: the pool holds at least
+        one full sequence's pages)."""
+        if not self._paged:
+            return
+        k = self.ecfg.decode_block
+        for slot in sorted(self.slot_req):
+            if slot not in self.slot_req:      # evicted by a prior pass
+                continue
+            target = min(self.pool.lengths[slot] + k, self.ecfg.max_len)
+            while slot in self.slot_req \
+                    and not self.pool.grow(slot, target):
+                victim = self._pick_victim()
+                if victim is None:
+                    break
+                self._preempt(victim)
+
     # ---- decode: one fused K-step dispatch, one host sync --------- #
     def _decode_block(self) -> int:
+        self._ensure_decode_pages()
+        if not self.slot_req:
+            return 0
         fn = self._fused_decode[self._decode_mode()]
         (self.cache, self.last_tok, self.pos, self.active, self.remaining,
          self._key, toks, emits, dones) = fn(
             self.params, self.cache, self.last_tok, self.pos,
             self.active, self.remaining, self.temps, self.top_ks,
-            self.top_ps, self.eos_ids, self._key)
+            self.top_ps, self.eos_ids, self._key,
+            self.pool.page_table())
         self.dispatches += 1
         toks_h, emit_h, done_h = jax.device_get((toks, emits, dones))
         self.host_syncs += 1
@@ -446,9 +603,10 @@ class InferenceEngine:
 
     def perf_stats(self) -> Dict[str, Any]:
         """Dispatch/sync discipline counters (the paper's 'no CPU
-        fallback' claim, made measurable)."""
+        fallback' claim, made measurable) plus the paged-pool VRAM
+        metrics."""
         t = max(self.total_tokens, 1)
-        return {
+        stats = {
             "tokens": self.total_tokens,
             "steps": self.total_steps,
             "dispatches": self.dispatches,
@@ -458,7 +616,13 @@ class InferenceEngine:
             "prefill_traces": self.prefill_traces,
             "decode_traces": self.decode_traces,
             "decode_block": self.ecfg.decode_block,
+            "paged": self._paged,
+            "preemptions": self.preemptions,
             "queue_enqueued": self.scheduler.enqueued_total,
             "queue_dequeued": self.scheduler.dequeued_total,
+            "queue_requeued": self.scheduler.requeued_total,
             "queue_rejected": self.scheduler.rejected,
+            "pending_pages": self.scheduler.pending_pages,
         }
+        stats.update(self.pool.page_stats())
+        return stats

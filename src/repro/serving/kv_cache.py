@@ -1,16 +1,42 @@
-"""Slot-pool KV cache manager for continuous batching.
+"""KV-cache managers for continuous batching: contiguous slots and pages.
 
-The engine owns one model cache sized (layers, n_slots, max_len, ...).  The
-pool hands out slots, tracks per-slot lengths, and accounts bytes exactly —
-the numbers the SDAI placement controller charges against a node's HBM.
+Two pool flavours back the engine:
+
+* `SlotPool` — the original contiguous layout: one `max_len`-token strip
+  per slot.  Simple, but short requests strand the tail of their strip
+  (internal fragmentation), so a node's VRAM admits far fewer concurrent
+  requests than it could.
+* `PagedKVPool` — vLLM-style page-granular allocation: the physical cache
+  is a flat pool of fixed-size token pages; each slot owns a *page table*
+  (a row of physical page indices, mirrored in one device array) and grows
+  page-by-page as it decodes.  Slots can be oversubscribed against the
+  page budget — admission is page-aware and the engine preempts on
+  exhaustion — which is what turns raw VRAM into admitted requests.
+
+The jitted `gather_pages` / `scatter_pages` / `scatter_prefill_rows`
+helpers let the fused decode and bucketed prefill read/write *through*
+the page table entirely on device: one gather before the decode scan, one
+scatter after, zero extra host syncs.  Unallocated page-table entries hold
+the out-of-bounds sentinel (`n_pages`), which `mode="fill"` gathers as
+zeros and `mode="drop"` scatters discard — no masking round-trips.
+
+Byte accounting stays exact — the numbers the SDAI placement controller
+charges against a node's HBM are now a *page budget*, not worst-case
+`n_slots x max_len`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Set
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+# cache leaves that scale with sequence length and live in the paged
+# physical pool; everything else (ssm states, encoder cross-attention
+# KV) is constant-size per slot and stays slot-resident
+PAGED_LEAVES = ("k", "v", "k_scale", "v_scale")
 
 
 @dataclasses.dataclass
@@ -51,6 +77,233 @@ class SlotPool:
         return used / float(self.n_slots * self.max_len)
 
 
+class PagedKVPool:
+    """Page-granular KV allocator with a device-resident page table.
+
+    Host side: a free-list of physical page ids, per-slot page lists, and
+    per-slot token lengths.  Device side: one `(n_slots, pages_per_slot)`
+    int32 page table, rebuilt lazily after host mutations (an async
+    host->device upload, never a blocking sync).  Entries holding the
+    sentinel `n_pages` gather as zeros and scatter as no-ops.
+
+    `n_pages` defaults to the contiguous-equivalent budget
+    (`n_slots * pages_per_slot`); passing fewer pages oversubscribes the
+    slots — more concurrent requests for the same VRAM, relying on
+    page-aware admission and engine preemption when decode outgrows the
+    pool.
+    """
+
+    def __init__(self, n_slots: int, max_len: int, page_size: int = 16,
+                 n_pages: int = 0):
+        if page_size <= 0:
+            raise ValueError("page_size must be positive")
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.pages_per_slot = -(-max_len // page_size)   # ceil
+        self.n_pages = n_pages or n_slots * self.pages_per_slot
+        if self.n_pages < self.pages_per_slot:
+            raise ValueError(
+                f"kv pool of {self.n_pages} pages cannot hold even one "
+                f"max_len={max_len} sequence ({self.pages_per_slot} pages)")
+        self.free_slots: List[int] = list(range(n_slots))[::-1]
+        self.free_pages: List[int] = list(range(self.n_pages))[::-1]
+        self.slot_pages: Dict[int, List[int]] = {}
+        self.lengths: Dict[int, int] = {}     # cache tokens written/held
+        self.owners: Dict[int, int] = {}      # slot -> request_id
+        self.preemptions = 0                  # engine-driven evictions
+        self.grow_failures = 0                # page-exhaustion events
+        # host mirror of the device page table; sentinel == self.n_pages
+        self._table = np.full((n_slots, self.pages_per_slot), self.n_pages,
+                              np.int32)
+        self._table_dev = None
+        self._dirty = True
+
+    # ---- allocation ---------------------------------------------- #
+    def pages_for_tokens(self, n_tokens: int) -> int:
+        return max(-(-n_tokens // self.page_size), 1)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return (bool(self.free_slots)
+                and self.pages_for_tokens(n_tokens) <= len(self.free_pages))
+
+    def alloc(self, request_id: int, n_tokens: int,
+              reserve_tokens: int = 0) -> Optional[int]:
+        """Claim a slot plus pages covering `n_tokens` cache positions
+        (`reserve_tokens`, when larger, widens the page claim — the
+        contiguous/resident mode reserves the full `max_len` strip up
+        front).  All-or-nothing: returns None (claiming nothing) when
+        either the slot or the page budget is exhausted."""
+        need = self.pages_for_tokens(max(n_tokens, reserve_tokens))
+        if not self.free_slots or n_tokens > self.max_len \
+                or need > len(self.free_pages):
+            return None
+        slot = self.free_slots.pop()
+        pages = [self.free_pages.pop() for _ in range(need)]
+        self.slot_pages[slot] = pages
+        self.lengths[slot] = n_tokens
+        self.owners[slot] = request_id
+        self._table[slot, :need] = pages
+        self._dirty = True
+        return slot
+
+    def grow(self, slot: int, upto_tokens: int) -> bool:
+        """Extend `slot`'s page table to cover `upto_tokens` positions.
+        All-or-nothing; False means the free list ran dry (the engine's
+        preemption trigger)."""
+        have = self.slot_pages.get(slot)
+        if have is None:
+            return False
+        need = min(self.pages_for_tokens(upto_tokens),
+                   self.pages_per_slot) - len(have)
+        if need <= 0:
+            return True
+        if need > len(self.free_pages):
+            self.grow_failures += 1
+            return False
+        new = [self.free_pages.pop() for _ in range(need)]
+        self._table[slot, len(have):len(have) + need] = new
+        have.extend(new)
+        self._dirty = True
+        return True
+
+    def advance(self, slot: int, n: int = 1):
+        self.lengths[slot] = min(self.lengths[slot] + n, self.max_len)
+
+    def release(self, slot: int):
+        if slot not in self.lengths:
+            return
+        del self.lengths[slot]
+        del self.owners[slot]
+        self.free_pages.extend(reversed(self.slot_pages.pop(slot)))
+        self._table[slot, :] = self.n_pages
+        self._dirty = True
+        self.free_slots.append(slot)
+
+    # ---- device view --------------------------------------------- #
+    def page_table(self):
+        """The `(n_slots, pages_per_slot)` int32 device page table.  Only
+        re-uploaded after host-side mutations; the upload is asynchronous
+        (no device->host sync)."""
+        if self._dirty or self._table_dev is None:
+            self._table_dev = jnp.asarray(self._table)
+            self._dirty = False
+        return self._table_dev
+
+    def row_pages(self, slot: int, n_pages_row: int) -> np.ndarray:
+        """Physical page ids backing `slot`, sentinel-padded to
+        `n_pages_row` — the prefill row-scatter index."""
+        out = np.full((n_pages_row,), self.n_pages, np.int32)
+        pages = self.slot_pages.get(slot, ())
+        k = min(len(pages), n_pages_row)
+        out[:k] = pages[:k]
+        return out
+
+    # ---- metrics -------------------------------------------------- #
+    @property
+    def free(self) -> List[int]:          # SlotPool-compatible alias
+        return self.free_slots
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self.free_slots)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.n_pages - len(self.free_pages)
+
+    def utilization(self) -> float:
+        """Fraction of pool *tokens* holding live cache entries."""
+        used = sum(self.lengths.values())
+        return used / float(self.n_pages * self.page_size)
+
+    def page_occupancy(self) -> float:
+        """Fraction of physical pages allocated — the admission-pressure
+        signal the autoscaler watches."""
+        return self.pages_in_use / float(self.n_pages)
+
+    def fragmentation(self) -> float:
+        """Internal fragmentation: fraction of *allocated* page tokens not
+        holding live entries (bounded by one page per slot)."""
+        if not self.pages_in_use:
+            return 0.0
+        used = sum(self.lengths.values())
+        return 1.0 - used / float(self.pages_in_use * self.page_size)
+
+    def page_stats(self) -> Dict[str, float]:
+        return {
+            "page_size": self.page_size,
+            "kv_pages": self.n_pages,
+            "pages_in_use": self.pages_in_use,
+            "page_occupancy": self.page_occupancy(),
+            "kv_page_utilization": self.utilization(),
+            "page_fragmentation": self.fragmentation(),
+            "preemptions": self.preemptions,
+            "grow_failures": self.grow_failures,
+        }
+
+
+# --------------------------------------------------------------------- #
+# Jitted paged gather/scatter — the device half of the page table.
+# Paged physical leaves are laid out (layers, n_pages, page_size, ...);
+# logical views are (layers, n_slots, pages_per_slot * page_size, ...).
+
+def split_paged(cache: Dict) -> (Dict, Dict):
+    """Partition a cache dict into (paged, resident) leaf sub-dicts."""
+    paged = {k: v for k, v in cache.items() if k in PAGED_LEAVES}
+    resident = {k: v for k, v in cache.items() if k not in PAGED_LEAVES}
+    return paged, resident
+
+
+def gather_pages(paged: Dict, page_table):
+    """Materialize each slot's logical cache view from the physical page
+    pool: one gather per leaf, sentinel entries fill with zeros (masked
+    by `pos` in attention, so harmless)."""
+    idx = page_table.reshape(-1)
+    n_slots, pps = page_table.shape
+
+    def g(leaf):
+        rows = jnp.take(leaf, idx, axis=1, mode="fill", fill_value=0)
+        return rows.reshape((leaf.shape[0], n_slots, pps * leaf.shape[2])
+                            + leaf.shape[3:])
+    return {k: g(v) for k, v in paged.items()}
+
+
+def scatter_pages(paged: Dict, view: Dict, page_table):
+    """Write updated logical views back into the physical pool: one
+    scatter per leaf; sentinel entries drop on device."""
+    idx = page_table.reshape(-1)
+    n_slots, pps = page_table.shape
+
+    def s(leaf, vleaf):
+        ps = leaf.shape[2]
+        rows = vleaf.reshape((leaf.shape[0], n_slots * pps, ps)
+                             + leaf.shape[3:])
+        return leaf.at[:, idx].set(rows.astype(leaf.dtype), mode="drop")
+    return {k: s(v, view[k]) for k, v in paged.items()}
+
+
+def scatter_prefill_rows(paged: Dict, rows: Dict, row_pages):
+    """Land a batch of freshly-prefilled rows in the page pool: each
+    row's sequence is zero-padded to a page multiple, cut into pages, and
+    scattered through `row_pages` ((n_rows, n_pages_row) physical ids,
+    sentinel-padded) — one op per leaf, jittable, padded bucket positions
+    and padded batch rows both drop on device."""
+    idx = row_pages.reshape(-1)
+    n_rows, npr = row_pages.shape
+
+    def s(leaf, rleaf):
+        ps = leaf.shape[2]
+        pad = npr * ps - rleaf.shape[2]
+        widths = [(0, 0), (0, 0), (0, pad)] + [(0, 0)] * (rleaf.ndim - 3)
+        padded = jnp.pad(rleaf, widths)
+        pages = padded.reshape((leaf.shape[0], n_rows * npr, ps)
+                               + leaf.shape[3:])
+        return leaf.at[:, idx].set(pages.astype(leaf.dtype), mode="drop")
+    return {k: s(v, rows[k]) for k, v in paged.items()}
+
+
+# --------------------------------------------------------------------- #
 def write_slot(cache, slot_cache, slot: int, batch_axis: int = 1):
     """Scatter a single-request cache (batch dim 1) into `slot` of the pool
     cache.  Works for every model family (transformer L-stacked / xlstm)."""

@@ -256,6 +256,27 @@ def test_text_prompt_encodes_with_model_vocab(client):
     assert out["usage"]["prompt_tokens"] == len("hi!".encode())
 
 
+def test_stream_final_chunks_carry_usage(client):
+    """OpenAI parity: the terminal chunk of a completion stream and of a
+    chat stream carries the `usage` object; token chunks never do."""
+    chunks = list(client.complete(MODEL, [1, 2, 3], max_tokens=4,
+                                  stream=True))
+    final = chunks[-1]
+    assert final["choices"][0]["finish_reason"] == "length"
+    assert final["usage"] == {"prompt_tokens": 3, "completion_tokens": 4,
+                              "total_tokens": 7}
+    assert all("usage" not in ch for ch in chunks[:-1])
+    chat_chunks = list(client.chat(MODEL, ["hi"], max_tokens=4,
+                                   stream=True))
+    cfinal = chat_chunks[-1]
+    assert cfinal["choices"][0]["finish_reason"] == "length"
+    assert cfinal["usage"]["completion_tokens"] == 4
+    assert cfinal["usage"]["prompt_tokens"] > 0      # templated prompt
+    assert cfinal["usage"]["total_tokens"] == \
+        cfinal["usage"]["prompt_tokens"] + 4
+    assert all("usage" not in ch for ch in chat_chunks[:-1])
+
+
 def test_sse_stream_framing(server):
     """Raw-socket SSE: ordered data frames, one finish chunk, then the
     literal `data: [DONE]` terminator."""

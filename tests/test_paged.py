@@ -1,0 +1,429 @@
+"""Paged KV cache + two-level tenant-fair scheduling: paged-vs-contiguous
+greedy parity, page-exhaustion preemption/requeue round-trips, weighted
+fair shares under contention, queued-cancel refunds, page accounting in
+the admin snapshot, and the sharded node executor."""
+import jax
+import pytest
+
+from repro.api import Gateway, TenantQuota
+from repro.cluster import BackendNode, Fleet
+from repro.configs import ARCHS
+from repro.core import (ModelCatalog, ModelDemand, ReplicaInfo, ReplicaKey,
+                        SDAIController)
+from repro.serving import (EngineConfig, InferenceEngine, Request,
+                           RequestState, SamplingParams, Scheduler,
+                           SchedulerConfig)
+from repro.serving.kv_cache import PagedKVPool, gather_pages, scatter_pages
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return ARCHS["olmo-1b"].reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg, param_store):
+    return param_store(cfg)
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("n_slots", 4)
+    kw.setdefault("max_len", 48)
+    return InferenceEngine(cfg, params, EngineConfig(**kw))
+
+
+def _run(eng, reqs, max_steps=10_000):
+    for r in reqs:
+        assert eng.submit(r)
+    eng.run_until_done(max_steps)
+    return [tuple(r.output) for r in reqs]
+
+
+def _work(n=5, max_tokens=10):
+    return [Request(model="m", prompt=list(range(1, 3 + i)),
+                    sampling=SamplingParams(max_tokens=max_tokens))
+            for i in range(n)]
+
+
+# ------------------- allocator unit behaviour ---------------------- #
+def test_paged_pool_alloc_grow_release_accounting():
+    pool = PagedKVPool(n_slots=4, max_len=32, page_size=8, n_pages=10)
+    assert pool.pages_per_slot == 4
+    s0 = pool.alloc(100, 5)              # 1 page
+    s1 = pool.alloc(101, 17)             # 3 pages
+    assert s0 is not None and s1 is not None and s0 != s1
+    assert pool.pages_in_use == 4
+    assert pool.page_occupancy() == pytest.approx(0.4)
+    # 22 live tokens over 4 allocated pages of 8
+    assert pool.fragmentation() == pytest.approx(1 - 22 / 32)
+    assert pool.grow(s0, 9)              # 5 -> 2 pages
+    assert pool.pages_in_use == 5
+    # exhaustion: growing s1 to need 5 more pages than exist must fail
+    # atomically (free list unchanged)
+    free_before = len(pool.free_pages)
+    s2 = pool.alloc(102, 32)             # 4 pages -> 9 in use, 1 free
+    assert s2 is not None
+    assert not pool.grow(s0, 32)         # needs 2, only 1 free
+    assert len(pool.free_pages) == 1 == free_before - 4
+    pool.release(s1)
+    assert pool.grow(s0, 32)
+    # page table rows of released slots are all-sentinel
+    table = pool.page_table()
+    row = table[s1].tolist() if hasattr(table[s1], "tolist") else []
+    assert all(p == pool.n_pages for p in row)
+
+
+def test_paged_pool_rejects_undersized_budget():
+    with pytest.raises(ValueError):
+        PagedKVPool(n_slots=2, max_len=64, page_size=8, n_pages=7)
+
+
+def test_gather_scatter_roundtrip():
+    """A logical view gathered through the page table and scattered back
+    leaves the physical pool byte-identical (and sentinel pages drop)."""
+    import jax.numpy as jnp
+    pool = PagedKVPool(n_slots=2, max_len=16, page_size=4)
+    s = pool.alloc(1, 9)                  # 3 pages out of 8
+    paged = {"k": jax.random.normal(jax.random.PRNGKey(0),
+                                    (2, pool.n_pages, 4, 1, 3))}
+    table = pool.page_table()
+    view = gather_pages(paged, table)
+    assert view["k"].shape == (2, 2, 16, 1, 3)
+    back = scatter_pages(paged, view, table)
+    assert jnp.array_equal(back["k"], paged["k"])
+    # mutate the slot's view; only its allocated pages change
+    view2 = {"k": view["k"].at[:, s, :9].add(1.0)}
+    out = scatter_pages(paged, view2, table)["k"]
+    touched = sorted(pool.slot_pages[s])
+    for p in range(pool.n_pages):
+        if p in touched:
+            continue
+        assert jnp.array_equal(out[:, p], paged["k"][:, p])
+
+
+# ------------------- paged vs contiguous parity -------------------- #
+@pytest.mark.parametrize("k", [1, 4, 8])
+def test_paged_matches_contiguous_greedy_parity(cfg, params, k):
+    """Greedy decode through the page table must be token-for-token
+    identical to the contiguous per-slot layout at every fused-block
+    size: paging is a memory-layout choice, never a numerics choice."""
+    contiguous = _run(_engine(cfg, params, decode_block=k, paged=False),
+                      _work())
+    paged = _run(_engine(cfg, params, decode_block=k, page_size=8),
+                 _work())
+    assert paged == contiguous
+    # and a deliberately page-misaligned pool (view longer than max_len)
+    odd = _run(_engine(cfg, params, decode_block=k, page_size=16,
+                       max_len=40), _work())
+    ref = _run(_engine(cfg, params, decode_block=k, paged=False,
+                       max_len=40), _work())
+    assert odd == ref
+
+
+def test_paged_dispatch_discipline_unchanged(cfg, params):
+    """Page-table gather/scatter lives inside the two jitted calls: the
+    paged engine issues exactly as many dispatches and host syncs as the
+    contiguous one on the same workload."""
+    stats = {}
+    for paged in (False, True):
+        eng = _engine(cfg, params, decode_block=4, paged=paged)
+        _run(eng, _work(6, max_tokens=12))
+        stats[paged] = eng.perf_stats()
+    for metric in ("tokens", "dispatches", "host_syncs"):
+        assert stats[True][metric] == stats[False][metric], metric
+
+
+# ------------------- preemption / requeue round-trip ---------------- #
+def test_page_exhaustion_preempts_requeues_and_resumes(cfg, params):
+    """Oversubscribed slots: 6 slots against a ~3-sequence page budget.
+    The engine must preempt on page exhaustion (evict, refund pages,
+    requeue) and the evicted requests must *resume* — every output
+    token-for-token identical to an uncontended run, nothing dropped,
+    no token emitted twice."""
+    ref = _run(_engine(cfg, params, n_slots=6, page_size=8,
+                       decode_block=4), _work(6, max_tokens=20))
+    eng = _engine(cfg, params, n_slots=6, page_size=8, kv_pages=18,
+                  decode_block=4)
+    reqs = _work(6, max_tokens=20)
+    out = _run(eng, reqs)
+    assert out == ref
+    assert all(len(o) == 20 for o in out)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    assert eng.preemptions >= 1
+    assert eng.scheduler.requeued_total == eng.preemptions
+    assert eng.pool.grow_failures >= 1
+    # pool fully drained afterwards: no leaked pages or slots
+    assert eng.pool.pages_in_use == 0 and eng.pool.n_active == 0
+
+
+def test_preemption_victim_is_lowest_deficit_tenant(cfg, params):
+    """With one over-served and one under-served tenant in slots, page
+    exhaustion evicts the over-served (lowest-deficit) tenant's slot."""
+    eng = _engine(cfg, params, n_slots=2, max_len=48, page_size=8,
+                  kv_pages=7, decode_block=4)
+    rich = Request(model="m", prompt=[1, 2], tenant="rich",
+                   sampling=SamplingParams(max_tokens=30))
+    poor = Request(model="m", prompt=[3, 4], tenant="poor",
+                   sampling=SamplingParams(max_tokens=30))
+    assert eng.submit(rich) and eng.submit(poor)
+    # skew the fairness clocks: "rich" has consumed far more service
+    eng.scheduler._vtime["rich"] = 100.0
+    eng.scheduler._vtime["poor"] = 1.0
+    while not eng.preemptions and (eng.slot_req or eng.scheduler.depth):
+        eng.step()
+    assert eng.preemptions >= 1
+    # the over-served tenant was evicted and requeued, not the other
+    assert eng.scheduler.tenant_backlog().get("rich", 0) >= 1 \
+        or rich.state == RequestState.QUEUED
+    eng.run_until_done()
+    assert len(rich.output) == 30 and len(poor.output) == 30
+
+
+# ------------------- weighted fair shares --------------------------- #
+def test_three_tenant_weighted_shares_within_20pct(cfg, params):
+    """Mixed-length 3-tenant soak under sustained contention: while every
+    tenant stays backlogged, served-token shares track the configured
+    DWRR weights within 20%."""
+    weights = {"a": 1.0, "b": 2.0, "c": 3.0}
+    eng = _engine(cfg, params, n_slots=3, page_size=8, decode_block=4)
+    eng.scheduler.weight_of = lambda t: weights.get(t, 1.0)
+    plens = {"a": 3, "b": 9, "c": 5}          # mixed prompt lengths
+    budgets = {"a": 8, "b": 6, "c": 10}       # mixed generation budgets
+    reqs = []
+    for t in weights:
+        for _ in range(40):
+            r = Request(model="m", prompt=list(range(1, 1 + plens[t])),
+                        tenant=t,
+                        sampling=SamplingParams(max_tokens=budgets[t]))
+            reqs.append(r)
+            assert eng.submit(r)
+    for _ in range(45):
+        eng.step()
+    backlog = eng.scheduler.tenant_backlog()
+    assert all(backlog.get(t, 0) > 0 for t in weights), \
+        "window outlived the contention the test needs"
+    served = {t: 0 for t in weights}
+    for r in reqs:
+        served[r.tenant] += len(r.output)
+    total = sum(served.values())
+    wtotal = sum(weights.values())
+    for t, w in weights.items():
+        share, target = served[t] / total, w / wtotal
+        assert abs(share - target) / target <= 0.20, (t, served)
+
+
+def test_single_tenant_keeps_fcfs_and_bucket_grouping():
+    """With one tenant the two-level scheduler degenerates to the old
+    behaviour: FCFS head plus same-bucket lookahead, order preserved."""
+    sched = Scheduler(SchedulerConfig(max_prefill_per_step=3))
+    lens = [3, 20, 5, 6, 18]               # buckets: 8, 32, 8, 8, 32
+    reqs = [Request(model="m", prompt=list(range(n))) for n in lens]
+    for r in reqs:
+        sched.submit(r)
+
+    def bucket_of(n):
+        b = 8
+        while b < n:
+            b <<= 1
+        return b
+    group = sched.next_prefill_bucket(4, bucket_of)
+    assert [len(r.prompt) for r in group] == [3, 5, 6]
+    group = sched.next_prefill_bucket(4, bucket_of)
+    assert [len(r.prompt) for r in group] == [20, 18]
+    assert sched.depth == 0
+
+
+def test_late_joiner_cannot_starve_incumbent():
+    """A tenant joining after an incumbent has accrued a large virtual
+    clock starts at the *system* virtual time, not zero — admissions
+    interleave immediately instead of the newcomer monopolizing the
+    engine until its clock catches up."""
+    sched = Scheduler(SchedulerConfig(max_prefill_per_step=1))
+
+    def submit(tenant, n=1):
+        for _ in range(n):
+            sched.submit(Request(model="m", prompt=[1], tenant=tenant,
+                                 sampling=SamplingParams(max_tokens=8)))
+    # incumbent b serves alone for a while: clock runs far ahead
+    submit("b", 10)
+    for _ in range(10):
+        assert sched.next_prefill_bucket(1, lambda n: 8)
+    # newcomer a joins while b momentarily has an empty queue
+    submit("a", 6)
+    submit("b", 6)
+    order = [sched.next_prefill_bucket(1, lambda n: 8)[0].tenant
+             for _ in range(12)]
+    # equal weights => near-alternation; the newcomer must not win more
+    # than one extra round in any prefix
+    for i in range(1, 13):
+        a_wins = order[:i].count("a")
+        assert a_wins <= i // 2 + 1, order
+
+
+def test_page_budget_gates_admission():
+    """The scheduler admits nothing when no backlogged head fits the
+    free-page budget, and respects the budget across a lookahead."""
+    sched = Scheduler(SchedulerConfig(max_prefill_per_step=4))
+    sched.pages_for = lambda r: len(r.prompt)      # 1 page per token
+    reqs = [Request(model="m", prompt=[1] * 4) for _ in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    assert sched.next_prefill_bucket(4, lambda n: 8, free_pages=3) == []
+    group = sched.next_prefill_bucket(4, lambda n: 8, free_pages=9)
+    assert len(group) == 2                         # 4 + 4 <= 9, not 12
+    assert sched.depth == 1
+
+
+# ------------------- cancel refunds --------------------------------- #
+def test_scheduler_cancel_drops_pending_pages():
+    sched = Scheduler()
+    sched.pages_for = lambda r: 5
+    a, b = Request(model="m", prompt=[1]), Request(model="m", prompt=[2])
+    sched.submit(a), sched.submit(b)
+    assert sched.pending_pages == 10
+    assert sched.cancel(a.request_id)
+    assert sched.pending_pages == 5
+    assert not sched.cancel(a.request_id)          # idempotent
+    assert sched.pending_pages == 5
+
+
+def _gateway_stack(param_store, cfg, n_slots=1, max_len=48):
+    fleet = Fleet([BackendNode("n0", "v5e-1", param_store=param_store)])
+    catalog = ModelCatalog()
+    catalog.register(cfg)
+    ctrl = SDAIController(fleet, catalog)
+    ctrl.discover()
+    inst = fleet.nodes["n0"].deploy(cfg, n_slots=n_slots, max_len=max_len)
+    ctrl.replicas.add(ReplicaInfo(ReplicaKey("n0", inst.instance_id),
+                                  cfg.name, "", n_slots, max_len,
+                                  inst.bytes))
+    return ctrl, inst, Gateway(ctrl)
+
+
+def test_cancel_queued_request_refunds_token_bucket(cfg, param_store):
+    """Buckets are charged max_tokens at submit; cancelling a request
+    that never left the engine queue must give the charge back — a
+    third request the un-refunded bucket could not afford is admitted."""
+    ctrl, inst, gw = _gateway_stack(param_store, cfg, n_slots=1)
+    # two requests' worth of tokens, effectively no refill
+    gw.admin.set_tenant_quota("t", TenantQuota(
+        tokens_per_s=0.001, burst_tokens=20.0))
+    sp = SamplingParams(max_tokens=10)
+    h1 = gw.submit(cfg.name, [1, 2], sp, tenant="t")   # occupies the slot
+    gw._pump()                                         # admitted: decoding
+    h2 = gw.submit(cfg.name, [3, 4], sp, tenant="t")   # queued behind it
+    assert not h2.done
+    assert h2.internal.state == RequestState.QUEUED
+    assert h2.cancel()
+    usage = ctrl.frontend.tenants.usage["t"]
+    assert usage.refunds == 1
+    assert usage.tokens_charged == 10                  # h1's charge only
+    # the refunded tokens admit a third request; without the refund this
+    # would be RATE_LIMITED
+    h3 = gw.submit(cfg.name, [5, 6], sp, tenant="t")
+    assert h3.response is None or h3.response.error is None
+    assert h1.result(timeout_s=60).ok and h3.result(timeout_s=60).ok
+
+
+def test_cancel_decoding_request_does_not_refund(cfg, param_store):
+    """Only never-admitted requests refund: an in-flight request already
+    consumed slot time, so its charge stands."""
+    ctrl, inst, gw = _gateway_stack(param_store, cfg, n_slots=1)
+    gw.admin.set_tenant_quota("t", TenantQuota(
+        tokens_per_s=0.001, burst_tokens=20.0))
+    h1 = gw.submit(cfg.name, [1, 2], SamplingParams(max_tokens=10),
+                   tenant="t")
+    gw._pump()
+    assert h1.cancel()
+    usage = ctrl.frontend.tenants.usage["t"]
+    assert usage.refunds == 0
+    assert usage.tokens_charged == 10
+
+
+# ------------------- page accounting upward ------------------------- #
+def test_admin_snapshot_exposes_page_occupancy(cfg, param_store):
+    ctrl, inst, gw = _gateway_stack(param_store, cfg, n_slots=2)
+    h = gw.submit(cfg.name, [1, 2, 3], SamplingParams(max_tokens=30))
+    gw._pump()                      # admitted: pages held mid-flight
+    snap = gw.admin.snapshot()
+    isnap = snap.nodes[0].instances[0]
+    assert isnap.kv_pages == inst.engine.pool.n_pages > 0
+    assert isnap.pages_in_use > 0
+    assert 0.0 < isnap.page_occupancy <= 1.0
+    assert 0.0 <= isnap.page_fragmentation < 1.0
+    d = snap.to_dict()
+    wire = d["agents"]["n0"]["instances"][0]
+    assert wire["pages_in_use"] == isnap.pages_in_use
+    assert wire["page_occupancy"] == isnap.page_occupancy
+    assert h.result(timeout_s=60).ok
+    # drained: occupancy returns to zero in a fresh snapshot
+    assert gw.admin.snapshot().nodes[0].instances[0].pages_in_use == 0
+
+
+def test_placement_charges_page_budget_not_worst_case(cfg):
+    """A kv_page_frac < 1 demand is strictly cheaper per replica than
+    the contiguous-equivalent, and the page budget floors at one full
+    sequence."""
+    full = ModelDemand(cfg, n_slots=8, max_len=64, page_size=8)
+    packed = ModelDemand(cfg, n_slots=8, max_len=64, page_size=8,
+                         kv_page_frac=0.5)
+    assert packed.kv_pages == full.kv_pages // 2
+    assert packed.bytes_at("") < full.bytes_at("")
+    tiny = ModelDemand(cfg, n_slots=4, max_len=64, page_size=8,
+                       kv_page_frac=0.01)
+    assert tiny.kv_pages == -(-64 // 8)          # one full sequence
+
+
+def test_engine_weights_flow_from_tenant_quotas(cfg, param_store):
+    """set_tenant_quota(weight=...) reaches every deployed engine's
+    scheduler without a broadcast."""
+    fleet = Fleet([BackendNode("n0", "v5e-1", param_store=param_store)])
+    catalog = ModelCatalog()
+    catalog.register(cfg)
+    ctrl = SDAIController(fleet, catalog)
+    ctrl.discover()
+    plan = ctrl.deploy([ModelDemand(cfg, min_replicas=1, max_replicas=1,
+                                    n_slots=2, max_len=48)])
+    assert not plan.unplaced
+    gw = Gateway(ctrl)
+    gw.admin.set_tenant_quota("vip", TenantQuota(weight=4.0))
+    inst = next(iter(fleet.nodes["n0"].instances.values()))
+    assert inst.engine.scheduler.weight_of("vip") == 4.0
+    assert inst.engine.scheduler.weight_of("anon") == 1.0
+    snap = gw.admin.snapshot()
+    vip = next(t for t in snap.tenants if t.tenant == "vip")
+    assert vip.weight == 4.0
+
+
+# ------------------- sharded node executor -------------------------- #
+def test_multi_instance_node_pumps_through_executor(cfg, param_store):
+    """A node hosting two engines steps them via its per-node thread
+    pool; both make progress and the pool is created lazily."""
+    node = BackendNode("n0", "v5e-1", param_store=param_store)
+    i1 = node.deploy(cfg, n_slots=2, max_len=48)
+    i2 = node.deploy(cfg, n_slots=2, max_len=48)
+    assert node._executor is None
+    reqs = []
+    for inst in (i1, i2):
+        for j in range(2):
+            r = Request(model=cfg.name, prompt=[1, 2 + j],
+                        sampling=SamplingParams(max_tokens=6))
+            reqs.append(r)
+            assert node.submit(inst.instance_id, r)
+    for _ in range(40):
+        if not node.has_work():
+            break
+        node.pump()
+    assert node._executor is not None          # sharded path exercised
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    assert all(len(r.output) == 6 for r in reqs)
+    # single-instance nodes never pay for a pool
+    solo = BackendNode("n1", "v5e-1", param_store=param_store)
+    s1 = solo.deploy(cfg, n_slots=2, max_len=48)
+    r = Request(model=cfg.name, prompt=[1, 2],
+                sampling=SamplingParams(max_tokens=4))
+    assert solo.submit(s1.instance_id, r)
+    while solo.has_work():
+        solo.pump()
+    assert solo._executor is None
+    assert len(r.output) == 4
