@@ -9,14 +9,17 @@ v1, plus four studies:
 * continuous runtime — >= 4 concurrent tenants across >= 2 nodes driven
   entirely by background pump threads (zero caller-side pumps), with
   per-tenant token-bucket rejections and load-driven controller scale-up,
+* prefix cache — an 80%-shared-prefix workload (one system prompt, many
+  private tails) with the hierarchical KV cache on vs off: cache-hit
+  rate, prefill dispatch tokens, TTFT, token-identical outputs,
 * http wire — requests/s and p95 TTFT through the OpenAI-compatible
   socket service vs the in-process Gateway (informational).
 
 Writes ``BENCH_serving.json``; CI gates ``dispatches_per_token`` /
-``host_syncs_per_token`` (lower is better) and the paged study's
-``kv_page_utilization`` (higher is better) against
-``benchmarks/baseline_serving.json`` (soft 20% regression budget —
-wall-clock numbers stay informational).
+``host_syncs_per_token`` (lower is better), the paged study's
+``kv_page_utilization`` and the prefix study's ``prefix_hit_rate``
+(higher is better) against ``benchmarks/baseline_serving.json`` (soft
+20% regression budget — wall-clock numbers stay informational).
 """
 from __future__ import annotations
 
@@ -195,6 +198,83 @@ def _paged_study(n_requests: int = 12, max_tokens: int = 24) -> dict:
         "kv_page_utilization":
             out["paged"]["kv_page_utilization"]
             / max(out["contiguous"]["kv_page_utilization"], 1e-9),
+    }
+    return out
+
+
+def _prefix_study(n_requests: int = 10, max_tokens: int = 12) -> dict:
+    """Prefix-cache study: every request carries the same 32-token
+    system prefix plus a private 8-token tail (80% shared).  With the
+    hierarchical KV cache on, only the first request prefills the full
+    prompt — the rest map the cached prefix pages and prefill their
+    suffix bucket only, so prefill dispatch tokens and TTFT drop while
+    greedy outputs stay token-identical.  Counters are deterministic;
+    timings are informational."""
+    cfg = ARCHS["olmo-1b"].reduced()
+    params = _store(cfg)
+    shared = list(range(1, 33))                 # 32 tokens = 4 pages
+    prompts = [shared + [40 + i, 50 + i, 60 + i, 70 + i,
+                         40 + i, 50 + i, 60 + i, 71 + i]
+               for i in range(n_requests)]      # 40 tokens, 80% shared
+    out, outputs = {}, {}
+    for name, on in (("cache_off", False), ("cache_on", True)):
+        eng = InferenceEngine(cfg, params,
+                              EngineConfig(n_slots=4, max_len=64,
+                                           decode_block=4, page_size=8,
+                                           prefix_cache=on))
+        # compile outside the clock: full-prompt prefill, and (cache on)
+        # the suffix-admission trace; flush so the bench window starts
+        # cache-cold and the hit rate reflects the workload, not warmup
+        for p in ([99] * 40, [99] * 32 + [98] * 8):
+            eng.submit(Request(model=cfg.name, prompt=list(p),
+                               sampling=SamplingParams(max_tokens=2)))
+            eng.run_until_done()
+        if on:
+            eng.flush_prefix_cache()
+            cache_base = eng.prefix_cache.stats()
+        base = eng.perf_stats()
+        ttfts, outs = [], []
+        t0 = time.perf_counter()
+        for p in prompts:
+            r = Request(model=cfg.name, prompt=list(p),
+                        sampling=SamplingParams(max_tokens=max_tokens))
+            eng.submit(r)
+            eng.run_until_done()
+            ttfts.append(r.ttft)
+            outs.append(tuple(r.output))
+        wall = time.perf_counter() - t0
+        stats = eng.perf_stats()
+        outputs[name] = outs
+        ttfts.sort()
+        toks = stats["tokens"] - base["tokens"]
+        out[name] = {
+            "requests": n_requests,
+            "prefill_dispatch_tokens":
+                stats["prefill_dispatch_tokens"]
+                - base["prefill_dispatch_tokens"],
+            "suffix_prefills":
+                stats["suffix_prefills"] - base["suffix_prefills"],
+            "mean_ttft_ms": (sum(ttfts) / len(ttfts) * 1e3
+                             if ttfts else 0.0),
+            "p95_ttft_ms": _pct(ttfts, 0.95) * 1e3,
+            "tok_per_s": toks / wall if wall > 0 else 0.0,
+        }
+        if on:
+            cs = eng.prefix_cache.stats()
+            lookups = cs["lookups"] - cache_base["lookups"]
+            hits = cs["hits"] - cache_base["hits"]
+            out[name]["prefix_hit_rate"] = hits / max(lookups, 1)
+    # caching is a memory optimization, never a numerics change
+    assert outputs["cache_on"] == outputs["cache_off"], \
+        "prefix cache changed greedy outputs"
+    on, off = out["cache_on"], out["cache_off"]
+    assert on["prefix_hit_rate"] >= 0.8, out
+    assert on["prefill_dispatch_tokens"] < off["prefill_dispatch_tokens"]
+    out["gain"] = {
+        "prefill_dispatch_tokens":
+            off["prefill_dispatch_tokens"]
+            / max(on["prefill_dispatch_tokens"], 1),
+        "mean_ttft": off["mean_ttft_ms"] / max(on["mean_ttft_ms"], 1e-9),
     }
     return out
 
@@ -438,6 +518,18 @@ def run(n_requests: int = 12, max_tokens: int = 24,
                  f"kv_page_util={paged['paged']['kv_page_utilization']:.3f};"
                  f"preemptions={paged['paged']['preemptions']};"
                  f"tok_per_s={paged['paged']['tok_per_s']:.1f}"))
+    prefix = _prefix_study()
+    report["prefix"] = prefix
+    rows.append(("serving_prefix_cache", 0.0,
+                 f"hit_rate={prefix['cache_on']['prefix_hit_rate']:.2f};"
+                 f"prefill_tokens_on="
+                 f"{prefix['cache_on']['prefill_dispatch_tokens']};"
+                 f"prefill_tokens_off="
+                 f"{prefix['cache_off']['prefill_dispatch_tokens']};"
+                 f"mean_ttft_on_ms="
+                 f"{prefix['cache_on']['mean_ttft_ms']:.2f};"
+                 f"mean_ttft_off_ms="
+                 f"{prefix['cache_off']['mean_ttft_ms']:.2f}"))
     runtime = _runtime_study()
     report["runtime"] = runtime
     http = _http_study()

@@ -5,10 +5,12 @@ against the checked-in ``benchmarks/baseline_serving.json``: the job
 fails when ``dispatches_per_token`` or ``host_syncs_per_token`` (lower is
 better) regresses more than the budget (default 20%) for any fused-K
 variant, or when the paged study's ``kv_page_utilization`` (higher is
-better — the fraction of KV-pool tokens holding live cache entries)
-drops more than the budget below baseline.  Wall-clock metrics (tok/s,
-step percentiles) are machine-dependent and stay informational — they
-are printed but never gate.
+better — the fraction of KV-pool tokens holding live cache entries) or
+the prefix study's ``prefix_hit_rate`` (higher is better — cache hits
+on the 80%-shared-prefix workload) drops more than the budget below
+baseline.  Wall-clock metrics (tok/s, step percentiles) are
+machine-dependent and stay informational — they are printed but never
+gate.
 
 Usage:  python benchmarks/check_regression.py \
             [BENCH_serving.json] [benchmarks/baseline_serving.json]
@@ -79,6 +81,33 @@ def main(argv):
                   f"{current['paged']['contiguous']['peak_active_slots']})"
                   f" preemptions={cur_paged.get('preemptions')} "
                   f"tok_per_s={cur_paged.get('tok_per_s', 0):.1f}")
+
+    # prefix-cache study: hit rate gates (higher is better); dispatch
+    # tokens and TTFT are printed for the record
+    base_pref = baseline.get("prefix", {}).get("cache_on")
+    cur_pref = current.get("prefix", {}).get("cache_on")
+    if base_pref is not None:
+        if cur_pref is None:
+            failures.append(f"prefix study missing from {current_path}")
+        else:
+            b = base_pref["prefix_hit_rate"]
+            c = cur_pref["prefix_hit_rate"]
+            limit = b * (1 - BUDGET)
+            status = "FAIL" if c < limit else "ok"
+            print(f"[{status}] prefix.prefix_hit_rate: "
+                  f"current={c:.6f} baseline={b:.6f} "
+                  f"(floor={limit:.6f})")
+            if c < limit:
+                failures.append(
+                    f"prefix.prefix_hit_rate regressed "
+                    f"{(1 - c / b) * 100:.1f}% (> {BUDGET * 100:.0f}%)")
+            off = current.get("prefix", {}).get("cache_off", {})
+            print(f"[info] prefix: prefill_tokens_on="
+                  f"{cur_pref.get('prefill_dispatch_tokens')} "
+                  f"off={off.get('prefill_dispatch_tokens')} "
+                  f"mean_ttft_on_ms="
+                  f"{cur_pref.get('mean_ttft_ms', 0):.2f} "
+                  f"off={off.get('mean_ttft_ms', 0):.2f}")
 
     rt = current.get("runtime")
     if rt is not None:

@@ -38,6 +38,15 @@ class InstanceSnapshot:
     page_occupancy: float = 0.0
     page_fragmentation: float = 0.0
     preemptions: int = 0
+    # hierarchical KV memory (prefix cache + host swap tier); zeros when
+    # the engine runs without the hierarchy enabled
+    cache_hit_rate: float = 0.0
+    cache_device_pages: int = 0
+    cache_evictable_pages: int = 0
+    host_pages: int = 0
+    host_pages_in_use: int = 0
+    swap_outs: int = 0
+    swap_ins: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,7 +119,18 @@ class FleetSnapshot:
                                    "pages_in_use": i.pages_in_use,
                                    "page_occupancy": i.page_occupancy,
                                    "page_fragmentation":
-                                       i.page_fragmentation}
+                                       i.page_fragmentation,
+                                   "cache": {
+                                       "hit_rate": i.cache_hit_rate,
+                                       "device_pages":
+                                           i.cache_device_pages,
+                                       "evictable_pages":
+                                           i.cache_evictable_pages,
+                                       "host_pages": i.host_pages,
+                                       "host_pages_in_use":
+                                           i.host_pages_in_use,
+                                       "swap_outs": i.swap_outs,
+                                       "swap_ins": i.swap_ins}}
                                   for i in n.instances],
                 } for n in self.nodes},
             "models": {m.name: m.replicas for m in self.models},
@@ -164,8 +184,23 @@ class AdminAPI:
                         if inst.engine is not None:
                             # instance lock: page_stats iterates pool
                             # dicts a pump thread mutates mid-step
+                            eng = inst.engine
                             with inst.lock:
-                                ps = inst.engine.pool.page_stats()
+                                ps = eng.pool.page_stats()
+                                pc, hp = eng.prefix_cache, eng.host_pool
+                                cache = dict(
+                                    cache_hit_rate=(
+                                        pc.hit_rate() if pc else 0.0),
+                                    cache_device_pages=(
+                                        pc.device_pages if pc else 0),
+                                    cache_evictable_pages=(
+                                        pc.evictable_device_pages()
+                                        if pc else 0),
+                                    host_pages=hp.n_pages if hp else 0,
+                                    host_pages_in_use=(
+                                        hp.in_use if hp else 0),
+                                    swap_outs=eng.swap_outs,
+                                    swap_ins=eng.swap_ins)
                             frag = ps["page_fragmentation"]
                             pages = dict(
                                 page_size=int(ps["page_size"]),
@@ -173,7 +208,8 @@ class AdminAPI:
                                 pages_in_use=int(ps["pages_in_use"]),
                                 page_occupancy=ps["page_occupancy"],
                                 page_fragmentation=frag,
-                                preemptions=int(ps["preemptions"]))
+                                preemptions=int(ps["preemptions"]),
+                                **cache)
                         else:
                             pages = dict(page_size=inst.page_size,
                                          kv_pages=inst.kv_pages)
@@ -218,6 +254,31 @@ class AdminAPI:
             last_update=c.clock(), tenants=tuple(tenants))
 
     # ---- mutate -------------------------------------------------- #
+    def flush_cache(self, model: Optional[str] = None) -> Dict[str, int]:
+        """Drop every unpinned prefix-cache entry (device and host
+        tiers) on every live engine — or only on `model`'s replicas.
+        Pinned entries (pages a running slot still reads) survive.
+        Returns aggregate `{"flushed": n, "remaining": m}`."""
+        c = self.c
+        flushed = remaining = 0
+        for nid in c.nodes.ids():
+            node = c.fleet.nodes.get(nid)
+            if node is None or not c.node_alive(nid):
+                continue
+            for r in c.replicas.on_node(nid):
+                if model is not None and r.model_name != model:
+                    continue
+                inst = node.instances.get(r.key.instance_id)
+                if inst is None or inst.engine is None:
+                    continue
+                with inst.lock:
+                    res = inst.engine.flush_prefix_cache()
+                flushed += int(res.get("flushed", 0))
+                remaining += int(res.get("remaining", 0))
+        self.c.bus.emit("cache_flushed", model=model or "*",
+                        flushed=flushed, remaining=remaining)
+        return {"flushed": flushed, "remaining": remaining}
+
     def deploy_model(self, demand: ModelDemand) -> DeployResult:
         plan = self.c.deploy([demand])
         return DeployResult(placed=len(plan.assignments),

@@ -53,6 +53,28 @@ class HTTPClientError(RuntimeError):
                 if self.code is not None else None)
 
 
+class _CountingSocket:
+    """Transparent socket proxy that counts bytes handed to `sendall` —
+    the client's witness for whether any request bytes could have
+    reached the server before a send error."""
+
+    def __init__(self, sock):
+        self._sock = sock
+        self.sent = 0
+
+    def sendall(self, data):
+        # count *before* the write: a failed sendall may still have
+        # pushed a prefix onto the wire, so any attempted byte counts
+        try:
+            self.sent += memoryview(data).nbytes
+        except TypeError:
+            self.sent += len(data)
+        return self._sock.sendall(data)
+
+    def __getattr__(self, name):
+        return getattr(self._sock, name)
+
+
 class HTTPClient:
     def __init__(self, base_url: str = "http://127.0.0.1:8000", *,
                  tenant: str = "", timeout_s: float = 130.0,
@@ -109,8 +131,19 @@ class HTTPClient:
             headers["Content-Type"] = "application/json"
         for attempt in (0, 1):
             conn = self._connection()
+            sent = 0
             try:
-                conn.request(method, path, body=payload, headers=headers)
+                if conn.sock is None:
+                    conn.connect()
+                if isinstance(conn.sock, _CountingSocket):
+                    conn.sock.sent = 0          # reused keep-alive conn
+                else:
+                    conn.sock = _CountingSocket(conn.sock)
+                try:
+                    conn.request(method, path, body=payload,
+                                 headers=headers)
+                finally:
+                    sent = conn.sock.sent if conn.sock is not None else 0
             except (http.client.CannotSendRequest,
                     http.client.ResponseNotReady):
                 raise RuntimeError(
@@ -119,11 +152,15 @@ class HTTPClient:
                     "HTTPClient (e.g. to cancel() a live stream)"
                 ) from None
             except OSError:
-                # send failed: the server never saw the whole request,
-                # so resending (once, on a fresh connection) is safe for
-                # any method
+                # send failed.  Resending on a fresh connection is safe
+                # only when the server cannot have acted on the request:
+                # the method is idempotent, or *zero* request bytes were
+                # handed to the socket (a partial send on a stale
+                # keep-alive connection may still have delivered the
+                # whole request — blind-retrying a generation POST there
+                # could double-submit and double-charge it)
                 self.close()
-                if attempt:
+                if attempt or (method != "GET" and sent > 0):
                     raise
                 continue
             try:
@@ -281,6 +318,12 @@ class HTTPClient:
 
     def admin_resume(self, model: str) -> Dict[str, Any]:
         return self._json("POST", "/v1/admin/resume", {"model": model})
+
+    def admin_cache_flush(self, model: str = "") -> Dict[str, Any]:
+        """Drop unpinned prefix-cache entries fleet-wide (or for one
+        model).  Returns `{"flushed": n, "remaining": m}`."""
+        body = {"model": model} if model else {"flush": True}
+        return self._json("POST", "/v1/admin/cache/flush", body)
 
     def set_tenant_quota(self, tenant: str, *,
                          requests_per_s: float = 0.0,

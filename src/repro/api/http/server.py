@@ -451,6 +451,9 @@ class _Handler(BaseHTTPRequestHandler):
                 "tenant": tenant,
                 "requests_per_s": quota.requests_per_s,
                 "tokens_per_s": quota.tokens_per_s})
+        if verb == "cache/flush":
+            model = schemas._field(body, "model", str, default="") or None
+            return self._send_json(200, gw.admin.flush_cache(model))
         raise WireError(ErrorCode.INVALID_REQUEST,
                         f"unknown admin verb {verb!r}")
 

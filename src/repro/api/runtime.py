@@ -190,12 +190,15 @@ class ServingRuntime:
                     sched = inst.engine.scheduler
                     depth += sched.depth
                     head_wait = max(head_wait, sched.head_wait_s())
-                    # KV-page occupancy: a nearly-exhausted pool means
-                    # admitted work is about to preempt — VRAM pressure
-                    # the queue depth alone cannot see
+                    # KV-page occupancy net of evictable prefix-cache
+                    # pages: a nearly-exhausted pool means admitted work
+                    # is about to preempt — VRAM pressure queue depth
+                    # alone cannot see — but pages the cache will hand
+                    # back on demand are not pressure, so a cache-warm
+                    # idle engine does not trigger scale-up
                     page_pressure = max(
                         page_pressure,
-                        inst.engine.pool.page_occupancy())
+                        inst.engine.page_pressure())
             out[model] = ModelLoad(
                 queue_depth=depth,
                 inflight=gw.inflight(model),

@@ -171,7 +171,9 @@ class BackendNode:
                n_slots: int = 4, max_len: int = 128,
                real: bool = True, decode_block: int = 4,
                page_size: int = 16, kv_pages: int = 0,
-               paged: bool = True) -> Instance:
+               paged: bool = True, prefix_cache: bool = False,
+               prefix_cache_pages: int = 0, host_kv_pages: int = 0,
+               prefix_share_tenants: bool = False) -> Instance:
         """Launch one model instance (the controller's startup-script
         analogue).  `kv_pages` sizes the paged KV pool (0 => the
         contiguous-equivalent budget); HBM is charged by page budget, not
@@ -198,7 +200,10 @@ class BackendNode:
                                  quantize=quantize, seed=self._seed,
                                  decode_block=decode_block,
                                  page_size=page_size, kv_pages=kv_pages,
-                                 paged=paged))
+                                 paged=paged, prefix_cache=prefix_cache,
+                                 prefix_cache_pages=prefix_cache_pages,
+                                 host_kv_pages=host_kv_pages,
+                                 prefix_share_tenants=prefix_share_tenants))
         inst = Instance(next(_inst_ids), cfg.name, cfg, quantize, n_slots,
                         max_len, need, engine, page_size=page_size,
                         kv_pages=eff_pages)

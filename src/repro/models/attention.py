@@ -146,6 +146,29 @@ def attention(q, k, v, *, causal=True, window=0, prefix=0, q_offset=0,
                              kv_offset=kv_offset)
 
 
+def suffix_attention(q, k_cache, v_cache, q_pos):
+    """Multi-token decode attention for suffix prefill: `q` (B, Q, H, hd)
+    holds Q new tokens per row at *per-row* absolute positions `q_pos`
+    (B, Q); caches (B, S, K, hd) are dense from position 0 and already
+    contain the new tokens' KV.  Purely causal by absolute position
+    (no window/prefix — callers gate eligibility), replicating
+    `_full_attention`'s exact op sequence so a cached-prefix suffix pass
+    stays numerically aligned with the full-prefill path."""
+    with jax.named_scope("suffix_attention"):
+        b, qlen, h, hd = q.shape
+        s = k_cache.shape[1]
+        nkv = k_cache.shape[2]
+        qf = _gqa_fold(q, nkv).astype(jnp.float32)
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qf,
+                            k_cache.astype(jnp.float32)) / (hd ** 0.5)
+        m = jnp.arange(s)[None, None, :] <= q_pos[:, :, None]   # (B,Q,S)
+        scores = jnp.where(m[:, None, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", w,
+                         v_cache.astype(jnp.float32))
+        return out.reshape(b, qlen, h, hd).astype(q.dtype)
+
+
 # --------------------------------------------------------------------- #
 # Decode (single new token against a cache)
 

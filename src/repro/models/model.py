@@ -89,6 +89,14 @@ class Model:
             return xl.prefill(params, self.cfg, tokens, **kw)
         return tf.prefill(params, self.cfg, tokens, **kw)
 
+    def prefill_suffix(self, params, cache, tokens, offsets, lengths, *,
+                       sh=tf._id_sh):
+        """Extend per-row caches with suffix tokens at per-row offsets
+        (the prefix-cache admission path).  Causal decoder-only — the
+        engine gates eligibility; see `transformer.prefill_suffix`."""
+        return tf.prefill_suffix(params, self.cfg, cache, tokens,
+                                 offsets, lengths, sh=sh)
+
     def decode(self, params, cache, token, pos, *, sh=tf._id_sh):
         if self.cfg.block == "xlstm":
             return xl.decode_step(params, self.cfg, cache, token, sh=sh)

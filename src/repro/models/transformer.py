@@ -635,6 +635,76 @@ def prefill(params, cfg: ArchConfig, tokens, *, prefix_embeds=None,
     return logits[:, -1], cache, pos
 
 
+def prefill_suffix(params, cfg: ArchConfig, cache, tokens, offsets,
+                   lengths, *, sh: Sharder = _id_sh):
+    """Extend per-row caches with a *batch of suffix tokens* in one pass —
+    the prefix-cache admission path: rows arrive with `offsets` (B,) cache
+    positions already valid (the shared cached prefix), `tokens` (B, S)
+    right-padded suffix ids, and `lengths` (B,) valid suffix counts
+    (>= 1).  The multi-token generalization of `decode_step`: suffix KV
+    is written into the cache view at per-row offsets, attention is
+    causal by per-row absolute position, and each row's logits come from
+    its own last real token.
+
+    Returns (last_logits (B, V), new_cache, pos (B,)) with
+    pos = offsets + lengths - 1 (index of the last valid cache slot).
+
+    Causal decoder-only: recurrent families (xlstm / hymba), enc-dec
+    cross-attention, sliding windows, always-visible prefix tokens and
+    quantized caches all depend on positions/state the suffix pass does
+    not reconstruct — callers gate on those (the engine falls back to
+    full prefill).
+    """
+    if cfg.block in ("xlstm", "hymba") or cfg.is_encdec \
+            or cfg.swa_window or cfg.n_meta_tokens \
+            or cfg.n_prefix_tokens or "k_scale" in cache:
+        raise NotImplementedError(
+            "prefill_suffix supports plain causal decoders only")
+    b, s = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0)              # (B,S,D)
+    q_pos = offsets[:, None] + jnp.arange(s)[None, :]          # (B,S)
+
+    def layer(carry, xs):
+        h = carry
+        lp = xs["lp"]
+        kc, vc = xs["k"], xs["v"]
+        x = L.norm(h, lp.get("ln1"), cfg.norm)
+        q = jnp.einsum("bsd,dhk->bshk", x, lp["attn"]["wq"])
+        k_new = jnp.einsum("bsd,dhk->bshk", x, lp["attn"]["wk"])
+        v_new = jnp.einsum("bsd,dhk->bshk", x, lp["attn"]["wv"])
+        cos, sin = L.rope_cos_sin(q_pos, cfg.head_dim, cfg.rope_theta)
+        q = L.apply_rope(q, cos, sin)
+        k_new = L.apply_rope(k_new, cos, sin)
+        # scatter the suffix block at each row's absolute positions —
+        # per-row scatter (not dynamic_update_slice: its clamped starts
+        # would shift a row whose offset+S exceeds the view and overwrite
+        # real prefix KV).  Out-of-range positions drop; garbage on
+        # padded rows lands beyond `pos`, masked out of every later read
+        # and overwritten as the slot advances.
+        upd = jax.vmap(lambda c, n, p: c.at[p].set(n, mode="drop"))
+        kc = upd(kc, k_new.astype(kc.dtype), q_pos)
+        vc = upd(vc, v_new.astype(vc.dtype), q_pos)
+        a_out = attn_lib.suffix_attention(q, kc, vc, q_pos)
+        h = h + jnp.einsum("bshk,hkd->bsd", a_out, lp["attn"]["wo"])
+        x = L.norm(h, lp.get("ln2"), cfg.norm)
+        f_out, _ = _ffn(lp, cfg, x, sh)
+        h = h + f_out
+        return h, {"k": kc, "v": vc}
+
+    xs = {"lp": params["layers"], "k": cache["k"], "v": cache["v"]}
+    h, ys = jax.lax.scan(layer, h, xs)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = ys["k"], ys["v"]
+    h = L.norm(h, params.get("final_norm"), cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    pos = (offsets + lengths - 1).astype(jnp.int32)
+    last_idx = jnp.clip(lengths - 1, 0, s - 1)
+    last = jnp.take_along_axis(logits, last_idx[:, None, None],
+                               axis=1)[:, 0]
+    return last, new_cache, pos
+
+
 def decode_step(params, cfg: ArchConfig, cache, token, pos, *,
                 sh: Sharder = _id_sh):
     """One decode step.  token: (B,) int32; pos: (B,) int32 — position of

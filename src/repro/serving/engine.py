@@ -55,6 +55,9 @@ from repro.serving import quantization as q_lib
 from repro.serving.kv_cache import (PagedKVPool, cache_bytes, gather_pages,
                                     scatter_pages, scatter_prefill_rows,
                                     split_paged, write_slots)
+from repro.serving.kv_hierarchy import (HostPagePool, PrefixCache,
+                                        drop_handle, swap_in_slot,
+                                        swap_out_slot)
 from repro.serving.request import (CODE_ENGINE_FAILED, CODE_INVALID_REQUEST,
                                    Request, RequestState)
 from repro.serving.sampler import sample_batched
@@ -74,6 +77,12 @@ class EngineConfig:
     page_size: int = 16           # KV tokens per physical page
     kv_pages: int = 0             # page budget; 0 => n_slots full strips
     paged: bool = True            # False => contiguous per-slot strips
+    # hierarchical KV memory (kv_hierarchy): both tiers default OFF so
+    # the baseline engine keeps PR 5's exact allocation behavior
+    prefix_cache: bool = False    # cross-request prefix page reuse
+    prefix_cache_pages: int = 0   # device pages the cache may pin; 0 => no cap
+    host_kv_pages: int = 0        # host-DRAM swap-tier pages; 0 => off
+    prefix_share_tenants: bool = False  # share prefix blocks across tenants
 
 
 class EngineFailure(RuntimeError):
@@ -117,6 +126,22 @@ class InferenceEngine:
         # page-aware admission: the scheduler charges each queued request
         # its projected page cost against the engine's free page budget
         self.scheduler.pages_for = self._pages_for
+        # hierarchical KV memory: prefix reuse needs page-aligned bucketed
+        # prefill over a plain causal decoder (recurrent state, enc-dec
+        # cross KV, windows and prefix tokens all break block sharing)
+        self._prefix_ok = (self._paged and self._supports_bucket
+                           and not cfg.is_encdec
+                           and self._prefix_tokens == 0
+                           and getattr(cfg, "swa_window", 0) == 0)
+        self.host_pool = (HostPagePool(engine_cfg.host_kv_pages)
+                          if engine_cfg.host_kv_pages > 0 and self._paged
+                          else None)
+        self.prefix_cache = (
+            PrefixCache(self.pool, host=self.host_pool,
+                        max_device_pages=engine_cfg.prefix_cache_pages,
+                        share_tenants=engine_cfg.prefix_share_tenants)
+            if engine_cfg.prefix_cache and self._prefix_ok else None)
+        self._swapped: Dict[int, Any] = {}   # request_id -> SwapHandle
 
         if engine_cfg.quantize:
             bits = 8 if engine_cfg.quantize == "int8" else 4
@@ -148,7 +173,12 @@ class InferenceEngine:
         self.host_syncs = 0       # blocking device->host transfers
         self.prefill_traces = 0   # compile-cache counter: bucketed prefill
         self.decode_traces = 0    # compiles once per decode_block
+        self.suffix_traces = 0    # compile-cache counter: suffix prefill
         self.preemptions = 0      # slots evicted on page exhaustion
+        self.prefill_dispatch_tokens = 0   # rows x bucket actually forwarded
+        self.suffix_prefills = 0  # rows admitted via cached-prefix suffix
+        self.swap_outs = 0        # slots parked to the host tier
+        self.swap_ins = 0         # slots restored with zero re-prefill
         self._build_steps()
 
     # ------------------------------------------------------------- #
@@ -173,11 +203,23 @@ class InferenceEngine:
     def _pages_for(self, req: Request) -> int:
         """Projected page cost of admitting `req` now: its full effective
         context (prompt + already-generated resume tokens + prefix) plus
-        one position of decode headroom."""
-        eff = (len(req.prompt) + len(req.output) + self._prefix_tokens)
+        one position of decode headroom — *net* of prefix-cache pages it
+        would map for free and, for a swap-parked request, net of the
+        shared pages its handle already holds on device."""
         if not self._paged:
             return self.pool.pages_per_slot
-        return self.pool.pages_for_tokens(min(eff + 1, self.ecfg.max_len))
+        handle = self._swapped.get(req.request_id)
+        if handle is not None:
+            return max(len(handle.host), 1)
+        eff = (len(req.prompt) + len(req.output) + self._prefix_tokens)
+        need = self.pool.pages_for_tokens(min(eff + 1, self.ecfg.max_len))
+        if self.prefix_cache is not None:
+            eff0 = len(req.prompt) + len(req.output)
+            cached = self.prefix_cache.peek(
+                req.tenant, list(req.prompt) + list(req.output),
+                eff0 - 1) // self.pool.page_size
+            need = max(need - cached, 1)
+        return need
 
     # ------------------------------------------------------------- #
     def _build_steps(self):
@@ -231,7 +273,7 @@ class InferenceEngine:
             # "full":   per-slot top-k/top-p filters too.
             def fused_decode(params, cache, last_tok, pos, active,
                              remaining, temps, top_ks, top_ps, eos_ids,
-                             key, page_table):
+                             key, page_table, write_table):
                 self.decode_traces += 1
                 p = self._dequant(params)
                 if paged:
@@ -275,14 +317,68 @@ class InferenceEngine:
                 if paged:
                     view_p, view_r = split_paged(view)
                     # one scatter per dispatch lands the block's writes
-                    # back in the physical page pool
-                    cache = {**scatter_pages(pool_p, view_p, page_table),
+                    # back in the physical page pool — through the
+                    # *write* table, whose cache-shared entries hold the
+                    # sentinel so shared prefix pages stay immutable
+                    cache = {**scatter_pages(pool_p, view_p, write_table),
                              **view_r}
                 else:
                     cache = view
                 return (cache, last_tok, pos, active, remaining, key,
                         toks, emits, dones)
             return fused_decode
+
+        def suffix_admit(params, cache, last_tok, pos, active, remaining,
+                         temps, top_ks, top_ps, eos_ids, key,
+                         tokens, offsets, lengths, slots, read_tables,
+                         write_tables, r_temps, r_topk, r_topp, r_eos,
+                         r_budget):
+            """Prefix-cache hit admission: gather each row's logical view
+            through its *full* page table (shared prefix + private
+            pages), run the suffix-only forward, and scatter back through
+            the *write* table (shared pages masked to the sentinel, so
+            nothing ever lands in a cache-shared page).  One dispatch,
+            one host sync — same discipline as `prefill_admit`."""
+            self.suffix_traces += 1
+            p = self._dequant(params)
+            pool_p, pool_r = split_paged(cache)
+            view = gather_pages(pool_p, read_tables)
+            logits, view, pos1 = model.prefill_suffix(
+                p, view, tokens, offsets, lengths)
+            view_p, _ = split_paged(view)
+            cache = {**scatter_pages(pool_p, view_p, write_tables),
+                     **pool_r}
+            key, sk = jax.random.split(key)
+            first = sample_batched(logits, sk, r_temps, r_topk, r_topp)
+            done0 = ((r_budget <= 1) | ((r_eos >= 0) & (first == r_eos))
+                     | (pos1 + 1 >= self._pos_limit))
+            last_tok = last_tok.at[slots].set(first, mode="drop")
+            pos = pos.at[slots].set(pos1 + 1, mode="drop")
+            active = active.at[slots].set(~done0, mode="drop")
+            remaining = remaining.at[slots].set(r_budget - 1, mode="drop")
+            temps = temps.at[slots].set(r_temps, mode="drop")
+            top_ks = top_ks.at[slots].set(r_topk, mode="drop")
+            top_ps = top_ps.at[slots].set(r_topp, mode="drop")
+            eos_ids = eos_ids.at[slots].set(r_eos, mode="drop")
+            return (cache, last_tok, pos, active, remaining, temps,
+                    top_ks, top_ps, eos_ids, key, first, done0)
+
+        def restore_slots(last_tok, pos, active, remaining, temps,
+                          top_ks, top_ps, eos_ids, slots, r_last, r_pos,
+                          r_budget, r_temps, r_topk, r_topp, r_eos):
+            """Swap-in resume: rebuild per-slot decode state host-known
+            at park time — no model forward, zero re-prefill.  Padded
+            rows carry slot == n_slots and drop on device."""
+            last_tok = last_tok.at[slots].set(r_last, mode="drop")
+            pos = pos.at[slots].set(r_pos, mode="drop")
+            active = active.at[slots].set(True, mode="drop")
+            remaining = remaining.at[slots].set(r_budget, mode="drop")
+            temps = temps.at[slots].set(r_temps, mode="drop")
+            top_ks = top_ks.at[slots].set(r_topk, mode="drop")
+            top_ps = top_ps.at[slots].set(r_topp, mode="drop")
+            eos_ids = eos_ids.at[slots].set(r_eos, mode="drop")
+            return (last_tok, pos, active, remaining, temps, top_ks,
+                    top_ps, eos_ids)
 
         def clear_slots(last_tok, pos, active, remaining, temps, slots):
             """Release/cancel/preempt: wipe per-slot device state so a
@@ -297,6 +393,10 @@ class InferenceEngine:
 
         self._prefill_admit = jax.jit(
             prefill_admit, donate_argnums=tuple(range(1, 11)))
+        self._suffix_admit = jax.jit(
+            suffix_admit, donate_argnums=tuple(range(1, 11)))
+        self._restore_slots = jax.jit(
+            restore_slots, donate_argnums=tuple(range(8)))
         decode_donate = (1, 2, 3, 4, 5, 10)
         # three variants; jax compiles each lazily on first use only
         self._fused_decode = {
@@ -366,10 +466,17 @@ class InferenceEngine:
         refunds its tenant token-bucket charge), "active" when it held a
         slot, False when unknown."""
         if self.scheduler.cancel(request_id):
+            handle = self._swapped.pop(request_id, None)
+            if handle is not None:       # parked in the host swap tier
+                drop_handle(self.pool, self.host_pool, handle)
+            if self.prefix_cache is not None:
+                self.prefix_cache.unbind(request_id)
             return "queued"
         for slot, req in list(self.slot_req.items()):
             if req.request_id == request_id:
                 del self.slot_req[slot]
+                if self.prefix_cache is not None:
+                    self.prefix_cache.unbind(request_id)
                 self.pool.release(slot)
                 self._release_device_slot(slot)
                 return "active"
@@ -431,14 +538,67 @@ class InferenceEngine:
         return debt
 
     def _admit(self):
-        budget = max(len(self.pool.free_pages) - self._decode_page_debt(),
-                     0)
+        budget = len(self.pool.free_pages) - self._decode_page_debt()
+        if self.prefix_cache is not None:
+            # LRU cache pages are reclaimable on demand: count them into
+            # the admission budget so the cache never blocks admission
+            budget += self.prefix_cache.evictable_device_pages()
         group = self.scheduler.next_prefill_bucket(
-            len(self.pool.free_slots), self._bucket_of, free_pages=budget)
+            len(self.pool.free_slots), self._bucket_of,
+            free_pages=max(budget, 0))
+        if not group:
+            return
+        # partition: swap-parked resumes restore with zero re-prefill;
+        # prefix-cache hits prefill only their suffix; the rest take the
+        # classic full bucketed prefill.  Admission may issue up to three
+        # dispatches when mixed — all off the fused decode hot path.
+        swaps = [r for r in group if r.request_id in self._swapped]
+        fresh = [r for r in group if r.request_id not in self._swapped]
+        if swaps:
+            self._admit_swapped(swaps)
+        hits, plain = [], fresh
+        if self.prefix_cache is not None and fresh:
+            hits, plain = [], []
+            paged, _ = split_paged(self.cache)
+            for req in fresh:
+                toks = list(req.prompt) + list(req.output)
+                entries, matched, new_paged = self.prefix_cache.match(
+                    req.tenant, toks, len(toks) - 1, paged=paged)
+                if new_paged is not None:       # host-tier promotion
+                    self.cache.update(new_paged)
+                    paged = new_paged
+                    self.dispatches += 1
+                if entries:
+                    # pin immediately: a later reclaim (another row's
+                    # shortfall or promotion) must not evict these
+                    # before the suffix admission maps their pages
+                    self.prefix_cache.bind(req.request_id, entries)
+                    hits.append((req, entries, matched))
+                else:
+                    plain.append(req)
+        if hits:
+            self._admit_suffix(hits)
+        if plain:
+            self._admit_prefill(plain)
+
+    def _reclaim_shortfall(self, want: int):
+        """Feed the free list from LRU refcount-0 cache pages before an
+        allocation would block (demoting to the host tier when one is
+        attached)."""
+        short = want - len(self.pool.free_pages)
+        if short > 0 and self.prefix_cache is not None:
+            demote = split_paged(self.cache)[0] if self.host_pool \
+                else None
+            self.prefix_cache.reclaim(short, demote)
+
+    def _admit_prefill(self, group: List[Request]):
         admitted: List[Tuple[int, Request]] = []
         for req in group:
             eff = len(req.prompt) + len(req.output)
             need = eff + self._prefix_tokens
+            self._reclaim_shortfall(
+                self.pool.pages_per_slot if not self._paged
+                else self.pool.pages_for_tokens(need))
             slot = self.pool.alloc(
                 req.request_id, need,
                 reserve_tokens=0 if self._paged else self.ecfg.max_len)
@@ -487,17 +647,163 @@ class InferenceEngine:
             self.eos_ids, self._key, toks, lengths, slots, row_pages,
             r_temps, r_topk, r_topp, r_eos, r_budget, extra)
         self.dispatches += 1
+        self.prefill_dispatch_tokens += pad_n * bucket
         first_h, done_h = jax.device_get((first, done0))
         self.host_syncs += 1
+        self._post_admit(admitted, first_h, done_h)
+
+    def _post_admit(self, admitted: List[Tuple[int, Request]],
+                    first_h, done_h):
+        """Shared tail of both admission dispatches: emit each row's
+        first sampled token, then park it in its slot (or finish it)."""
         for i, (slot, req) in enumerate(admitted):
             req.emit(int(first_h[i]))
             req.state = RequestState.DECODING
             self.total_tokens += 1
             if done_h[i]:
                 req.finish()
-                self.pool.release(slot)
+                self._finish_slot(slot, req)
             else:
                 self.slot_req[slot] = req
+
+    def _finish_slot(self, slot: int, req: Request):
+        """Free a finishing slot — donating its page-aligned prefix
+        blocks to the prefix cache first (the cache `retain`s them, so
+        the release below leaves the cache holding the last reference)."""
+        if self.prefix_cache is not None:
+            if not req.error and not req.cancelled:
+                n = self.pool.lengths[slot]
+                toks = (list(req.prompt) + list(req.output))[:n]
+                self.prefix_cache.insert(req.tenant, toks, n,
+                                         self.pool.slot_pages[slot])
+            self.prefix_cache.unbind(req.request_id)
+        self.pool.release(slot)
+
+    # ---- prefix-cache hits: suffix-only bucketed prefill ---------- #
+    def _admit_suffix(self, hits):
+        ecfg = self.ecfg
+        pps = self.pool.pages_per_slot
+        admitted: List[Tuple[int, Request]] = []
+        matched_of: Dict[int, int] = {}
+        for req, entries, matched in hits:
+            eff = len(req.prompt) + len(req.output)
+            shared = [e.page for e in entries]
+            self._reclaim_shortfall(
+                self.pool.pages_for_tokens(eff) - len(shared))
+            slot = self.pool.alloc(req.request_id, eff,
+                                   shared_pages=shared)
+            if slot is None:            # entries were pinned at match
+                self.prefix_cache.unbind(req.request_id)
+                self.scheduler.requeue(req)
+                continue
+            req.state = RequestState.PREFILLING
+            admitted.append((slot, req))
+            matched_of[slot] = matched
+        if not admitted:
+            return
+        bucket = self._bucket_of(max(
+            (len(r.prompt) + len(r.output)) - matched_of[s]
+            for s, r in admitted))
+        pad_n = _next_pow2(len(admitted))
+        toks = np.zeros((pad_n, bucket), np.int32)
+        offsets = np.zeros((pad_n,), np.int32)
+        lengths = np.ones((pad_n,), np.int32)
+        slots = np.full((pad_n,), ecfg.n_slots, np.int32)  # OOB => drop
+        read_tables = np.full((pad_n, pps), self.pool.n_pages, np.int32)
+        write_tables = np.full((pad_n, pps), self.pool.n_pages, np.int32)
+        r_temps = np.zeros((pad_n,), np.float32)
+        r_topk = np.zeros((pad_n,), np.int32)
+        r_topp = np.ones((pad_n,), np.float32)
+        r_eos = np.full((pad_n,), -1, np.int32)
+        r_budget = np.ones((pad_n,), np.int32)
+        for i, (slot, req) in enumerate(admitted):
+            prompt = list(req.prompt) + list(req.output)
+            matched = matched_of[slot]
+            suffix = prompt[matched:]
+            toks[i, :len(suffix)] = suffix
+            offsets[i] = matched
+            lengths[i] = len(suffix)
+            slots[i] = slot
+            read_tables[i] = self.pool.row_pages(slot, pps)
+            write_tables[i] = read_tables[i]
+            # shared prefix blocks are read-only: writes there drop
+            write_tables[i, :matched // self.pool.page_size] = \
+                self.pool.n_pages
+            s = req.sampling
+            r_temps[i] = s.temperature
+            r_topk[i] = s.top_k if s.top_k > 0 else ecfg.top_k
+            r_topp[i] = s.top_p if s.top_p < 1.0 else ecfg.top_p
+            r_eos[i] = s.eos_id
+            r_budget[i] = s.max_tokens - len(req.output)
+        (self.cache, self.last_tok, self.pos, self.active, self.remaining,
+         self.temps, self.top_ks, self.top_ps, self.eos_ids, self._key,
+         first, done0) = self._suffix_admit(
+            self.params, self.cache, self.last_tok, self.pos, self.active,
+            self.remaining, self.temps, self.top_ks, self.top_ps,
+            self.eos_ids, self._key, toks, offsets, lengths, slots,
+            read_tables, write_tables, r_temps, r_topk, r_topp, r_eos,
+            r_budget)
+        self.dispatches += 1
+        self.prefill_dispatch_tokens += pad_n * bucket
+        self.suffix_prefills += len(admitted)
+        first_h, done_h = jax.device_get((first, done0))
+        self.host_syncs += 1
+        self._post_admit(admitted, first_h, done_h)
+
+    # ---- swap-parked resumes: zero re-prefill restore ------------- #
+    def _admit_swapped(self, swaps: List[Request]):
+        paged, _ = split_paged(self.cache)
+        restored: List[Tuple[int, Request]] = []
+        for req in swaps:
+            handle = self._swapped[req.request_id]
+            self._reclaim_shortfall(len(handle.host))
+            res = swap_in_slot(self.pool, self.host_pool, paged, handle)
+            if res is None:
+                # slots/pages short right now: fall back to the classic
+                # recompute resume so progress never livelocks on swap
+                del self._swapped[req.request_id]
+                drop_handle(self.pool, self.host_pool, handle)
+                self.scheduler.requeue(req)
+                continue
+            slot, new_paged = res
+            if new_paged is not paged:
+                self.cache.update(new_paged)
+                paged = new_paged
+                self.dispatches += 1        # the swap-in scatter
+            del self._swapped[req.request_id]
+            self.swap_ins += 1
+            restored.append((slot, req))
+        if not restored:
+            return
+        ecfg = self.ecfg
+        pad_n = _next_pow2(len(restored))
+        slots = np.full((pad_n,), ecfg.n_slots, np.int32)
+        r_last = np.zeros((pad_n,), np.int32)
+        r_pos = np.zeros((pad_n,), np.int32)
+        r_budget = np.zeros((pad_n,), np.int32)
+        r_temps = np.zeros((pad_n,), np.float32)
+        r_topk = np.zeros((pad_n,), np.int32)
+        r_topp = np.ones((pad_n,), np.float32)
+        r_eos = np.full((pad_n,), -1, np.int32)
+        for i, (slot, req) in enumerate(restored):
+            slots[i] = slot
+            r_last[i] = req.output[-1]
+            r_pos[i] = self.pool.lengths[slot]
+            r_budget[i] = req.sampling.max_tokens - len(req.output)
+            s = req.sampling
+            r_temps[i] = s.temperature
+            r_topk[i] = s.top_k if s.top_k > 0 else ecfg.top_k
+            r_topp[i] = s.top_p if s.top_p < 1.0 else ecfg.top_p
+            r_eos[i] = s.eos_id
+            req.state = RequestState.DECODING
+            self.slot_req[slot] = req
+        (self.last_tok, self.pos, self.active, self.remaining, self.temps,
+         self.top_ks, self.top_ps, self.eos_ids) = self._restore_slots(
+            self.last_tok, self.pos, self.active, self.remaining,
+            self.temps, self.top_ks, self.top_ps, self.eos_ids,
+            slots, r_last, r_pos, r_budget, r_temps, r_topk, r_topp,
+            r_eos)
+        self.dispatches += 1
 
     def _decode_mode(self) -> str:
         """Pick the cheapest compiled decode variant the current batch
@@ -525,12 +831,28 @@ class InferenceEngine:
                                    len(kv[1].output), -kv[0]))[0]
 
     def _preempt(self, slot: int):
-        """Evict `slot`: refund its pages, wipe its device state, and
-        requeue its request at the front of its tenant queue.  The
-        request keeps its emitted tokens and later resumes by
-        re-prefilling prompt + output with the remaining budget."""
+        """Evict `slot`: park its private KV pages in the host swap tier
+        when one is attached (O(pages) moved, zero re-prefill on resume),
+        else refund the pages and fall back to the classic recompute
+        resume (re-prefill prompt + generated-so-far).  Either way the
+        request keeps its emitted tokens and re-enters the front of its
+        tenant queue with its remaining budget."""
         req = self.slot_req.pop(slot)
-        self.pool.release(slot)
+        swapped = False
+        if self.host_pool is not None:
+            paged, _ = split_paged(self.cache)
+            handle = swap_out_slot(self.pool, self.host_pool, paged, slot)
+            if handle is not None:
+                self._swapped[req.request_id] = handle
+                self.swap_outs += 1
+                self.dispatches += 1    # the page-gather dispatch
+                self.host_syncs += 1    # one device_get moves the blocks
+                swapped = True
+        if not swapped:
+            if self.prefix_cache is not None:
+                # recompute resume re-matches and re-binds at admission
+                self.prefix_cache.unbind(req.request_id)
+            self.pool.release(slot)
         self.pool.preemptions += 1
         self.preemptions += 1
         self._release_device_slot(slot)
@@ -566,7 +888,7 @@ class InferenceEngine:
             self.params, self.cache, self.last_tok, self.pos,
             self.active, self.remaining, self.temps, self.top_ks,
             self.top_ps, self.eos_ids, self._key,
-            self.pool.page_table())
+            self.pool.page_table(), self.pool.write_table())
         self.dispatches += 1
         toks_h, emit_h, done_h = jax.device_get((toks, emits, dones))
         self.host_syncs += 1
@@ -583,7 +905,7 @@ class InferenceEngine:
             if done_h[:, slot].any():
                 req.finish()
                 del self.slot_req[slot]
-                self.pool.release(slot)
+                self._finish_slot(slot, req)
         return emitted
 
     def run_until_done(self, max_steps: int = 10_000) -> int:
@@ -593,6 +915,26 @@ class InferenceEngine:
             self.step()
             steps += 1
         return steps
+
+    # ---- hierarchical KV memory: admin / autoscaler surface ------- #
+    def flush_prefix_cache(self) -> Dict[str, int]:
+        """Drop every unpinned prefix-cache entry (both tiers) — the
+        `/v1/admin/cache/flush` verb."""
+        if self.prefix_cache is None:
+            return {"flushed": 0, "remaining": 0}
+        return self.prefix_cache.flush()
+
+    def page_pressure(self) -> float:
+        """Fraction of the device page budget committed to *live* work.
+        Cache pages the engine could reclaim on demand are netted out,
+        so a warm-but-evictable prefix cache never reads as memory
+        pressure to the autoscaler."""
+        if not self._paged or self.pool.n_pages == 0:
+            return 0.0
+        in_use = self.pool.n_pages - len(self.pool.free_pages)
+        if self.prefix_cache is not None:
+            in_use -= self.prefix_cache.evictable_device_pages()
+        return max(in_use, 0) / self.pool.n_pages
 
     # ------------------------------------------------------------- #
     def memory_report(self) -> Dict[str, int]:
@@ -623,6 +965,21 @@ class InferenceEngine:
             "queue_requeued": self.scheduler.requeued_total,
             "queue_rejected": self.scheduler.rejected,
             "pending_pages": self.scheduler.pending_pages,
+            # hierarchical KV memory (kv_hierarchy)
+            "suffix_traces": self.suffix_traces,
+            "suffix_prefills": self.suffix_prefills,
+            "prefill_dispatch_tokens": self.prefill_dispatch_tokens,
+            "swap_outs": self.swap_outs,
+            "swap_ins": self.swap_ins,
+            "swapped_requests": len(self._swapped),
+            "cache_hit_rate": (self.prefix_cache.hit_rate()
+                               if self.prefix_cache is not None else 0.0),
+            "host_pages": (self.host_pool.n_pages
+                           if self.host_pool is not None else 0),
+            "host_pages_in_use": (self.host_pool.in_use
+                                  if self.host_pool is not None else 0),
         }
+        if self.prefix_cache is not None:
+            stats["prefix_cache"] = self.prefix_cache.stats()
         stats.update(self.pool.page_stats())
         return stats

@@ -91,6 +91,16 @@ class PagedKVPool:
     slots — more concurrent requests for the same VRAM, relying on
     page-aware admission and engine preemption when decode outgrows the
     pool.
+
+    Pages are **refcounted**: a physical page returns to the free list
+    only when its last reference drops.  A slot normally holds the sole
+    reference to each of its pages, but the prefix-cache layer
+    (`kv_hierarchy.PrefixCache`) can `retain` pages so finished requests
+    donate their prefix blocks, and map the same physical page into many
+    slots' tables (`alloc(shared_pages=...)`).  Shared pages (refs > 1)
+    are read-only through `write_table()` — the decode scatter sees the
+    sentinel there, so writes into a shared page drop on device;
+    `cow_page` forks a private copy when a write *must* land.
     """
 
     def __init__(self, n_slots: int, max_len: int, page_size: int = 16,
@@ -111,6 +121,7 @@ class PagedKVPool:
         self.slot_pages: Dict[int, List[int]] = {}
         self.lengths: Dict[int, int] = {}     # cache tokens written/held
         self.owners: Dict[int, int] = {}      # slot -> request_id
+        self.refs: Dict[int, int] = {}        # page -> reference count
         self.preemptions = 0                  # engine-driven evictions
         self.grow_failures = 0                # page-exhaustion events
         # host mirror of the device page table; sentinel == self.n_pages
@@ -118,6 +129,8 @@ class PagedKVPool:
                               np.int32)
         self._table_dev = None
         self._dirty = True
+        self._wtable_dev = None
+        self._wdirty = True
 
     # ---- allocation ---------------------------------------------- #
     def pages_for_tokens(self, n_tokens: int) -> int:
@@ -127,25 +140,96 @@ class PagedKVPool:
         return (bool(self.free_slots)
                 and self.pages_for_tokens(n_tokens) <= len(self.free_pages))
 
+    def _claim(self, n: int) -> Optional[List[int]]:
+        """Pop `n` fresh pages (refcount 1 each); None when short."""
+        if n > len(self.free_pages):
+            return None
+        pages = [self.free_pages.pop() for _ in range(n)]
+        for p in pages:
+            self.refs[p] = 1
+        return pages
+
     def alloc(self, request_id: int, n_tokens: int,
-              reserve_tokens: int = 0) -> Optional[int]:
+              reserve_tokens: int = 0, shared_pages=()) -> Optional[int]:
         """Claim a slot plus pages covering `n_tokens` cache positions
         (`reserve_tokens`, when larger, widens the page claim — the
         contiguous/resident mode reserves the full `max_len` strip up
-        front).  All-or-nothing: returns None (claiming nothing) when
+        front).  `shared_pages` (prefix-cache hit) are already-allocated
+        pages mapped read-only at the front of the new slot's table; the
+        pool bumps their refcount and claims fresh pages only for the
+        remainder.  All-or-nothing: returns None (claiming nothing) when
         either the slot or the page budget is exhausted."""
-        need = self.pages_for_tokens(max(n_tokens, reserve_tokens))
-        if not self.free_slots or n_tokens > self.max_len \
-                or need > len(self.free_pages):
+        total = self.pages_for_tokens(max(n_tokens, reserve_tokens))
+        fresh = total - len(shared_pages)
+        if not self.free_slots or n_tokens > self.max_len or fresh < 0 \
+                or fresh > len(self.free_pages):
             return None
         slot = self.free_slots.pop()
-        pages = [self.free_pages.pop() for _ in range(need)]
+        pages = list(shared_pages)
+        for p in pages:
+            self.refs[p] = self.refs.get(p, 0) + 1
+        pages.extend(self._claim(fresh))
         self.slot_pages[slot] = pages
         self.lengths[slot] = n_tokens
         self.owners[slot] = request_id
-        self._table[slot, :need] = pages
-        self._dirty = True
+        self._table[slot, :total] = pages
+        self._mark_dirty()
         return slot
+
+    def alloc_pages(self, n: int) -> Optional[List[int]]:
+        """Claim `n` orphan pages (no slot) — the COW fork / cache-demote
+        path.  Caller owns one reference to each."""
+        return self._claim(n)
+
+    def attach(self, request_id: int, pages: List[int],
+               n_tokens: int) -> Optional[int]:
+        """Map an existing page list into a fresh slot (swap-in restore).
+        Ownership of the caller's references *transfers* to the slot — no
+        refcount change, no page claim.  Returns the slot, or None when
+        every slot is busy (caller keeps ownership)."""
+        if not self.free_slots or len(pages) > self.pages_per_slot:
+            return None
+        slot = self.free_slots.pop()
+        self.slot_pages[slot] = list(pages)
+        self.lengths[slot] = n_tokens
+        self.owners[slot] = request_id
+        self._table[slot, :len(pages)] = pages
+        self._mark_dirty()
+        return slot
+
+    def detach(self, slot: int) -> List[int]:
+        """Unmap `slot` *without* dropping its page references (swap-out):
+        the caller now owns one reference to each returned page and must
+        eventually `free_page` or `attach` them."""
+        if slot not in self.lengths:
+            return []
+        del self.lengths[slot]
+        del self.owners[slot]
+        pages = self.slot_pages.pop(slot)
+        self._table[slot, :] = self.n_pages
+        self._mark_dirty()
+        self.free_slots.append(slot)
+        return pages
+
+    def retain(self, page: int):
+        """Add a reference to an allocated page (prefix-cache insert)."""
+        if page not in self.refs:
+            raise ValueError(f"retain of unallocated page {page}")
+        self.refs[page] += 1
+        self._wdirty = True
+
+    def free_page(self, page: int):
+        """Drop one reference; the page returns to the free list when the
+        last reference goes."""
+        r = self.refs.get(page)
+        if r is None:
+            raise ValueError(f"free of unallocated page {page}")
+        if r > 1:
+            self.refs[page] = r - 1
+            self._wdirty = True
+        else:
+            del self.refs[page]
+            self.free_pages.append(page)
 
     def grow(self, slot: int, upto_tokens: int) -> bool:
         """Extend `slot`'s page table to cover `upto_tokens` positions.
@@ -158,14 +242,36 @@ class PagedKVPool:
                    self.pages_per_slot) - len(have)
         if need <= 0:
             return True
-        if need > len(self.free_pages):
+        new = self._claim(need)
+        if new is None:
             self.grow_failures += 1
             return False
-        new = [self.free_pages.pop() for _ in range(need)]
         self._table[slot, len(have):len(have) + need] = new
         have.extend(new)
-        self._dirty = True
+        self._mark_dirty()
         return True
+
+    def cow_page(self, slot: int, i: int) -> Optional[tuple]:
+        """Copy-on-write fork: when page `i` of `slot` is shared, replace
+        it with a fresh private page and return `(old, new)` so the
+        caller copies the device contents (`copy_pages`) — the slot's
+        reference moves to the new page.  Returns None when the page is
+        already private (nothing to do) or the pool is out of pages."""
+        pages = self.slot_pages.get(slot)
+        if pages is None or i >= len(pages):
+            return None
+        old = pages[i]
+        if self.refs.get(old, 1) <= 1:
+            return None
+        claimed = self._claim(1)
+        if claimed is None:
+            return None
+        new = claimed[0]
+        self.free_page(old)        # drop the slot's shared reference
+        pages[i] = new
+        self._table[slot, i] = new
+        self._mark_dirty()
+        return old, new
 
     def advance(self, slot: int, n: int = 1):
         self.lengths[slot] = min(self.lengths[slot] + n, self.max_len)
@@ -175,12 +281,17 @@ class PagedKVPool:
             return
         del self.lengths[slot]
         del self.owners[slot]
-        self.free_pages.extend(reversed(self.slot_pages.pop(slot)))
+        for p in reversed(self.slot_pages.pop(slot)):
+            self.free_page(p)
         self._table[slot, :] = self.n_pages
-        self._dirty = True
+        self._mark_dirty()
         self.free_slots.append(slot)
 
     # ---- device view --------------------------------------------- #
+    def _mark_dirty(self):
+        self._dirty = True
+        self._wdirty = True
+
     def page_table(self):
         """The `(n_slots, pages_per_slot)` int32 device page table.  Only
         re-uploaded after host-side mutations; the upload is asynchronous
@@ -189,6 +300,25 @@ class PagedKVPool:
             self._table_dev = jnp.asarray(self._table)
             self._dirty = False
         return self._table_dev
+
+    def write_table(self):
+        """The page table with **shared** entries (refs > 1) masked to
+        the sentinel: reads gather through `page_table()`, writes scatter
+        through this one, so a write aimed at a cache-shared page drops
+        on device instead of corrupting other readers.  With no sharing
+        this is identical to `page_table()` (same device array — no
+        second upload on the common path)."""
+        if not self._wdirty and self._wtable_dev is not None:
+            return self._wtable_dev
+        shared = [p for p, r in self.refs.items() if r > 1]
+        if not shared:
+            self._wtable_dev = self.page_table()
+        else:
+            wt = self._table.copy()
+            wt[np.isin(wt, np.asarray(shared, np.int32))] = self.n_pages
+            self._wtable_dev = jnp.asarray(wt)
+        self._wdirty = False
+        return self._wtable_dev
 
     def row_pages(self, slot: int, n_pages_row: int) -> np.ndarray:
         """Physical page ids backing `slot`, sentinel-padded to
@@ -301,6 +431,72 @@ def scatter_prefill_rows(paged: Dict, rows: Dict, row_pages):
                                + leaf.shape[3:])
         return leaf.at[:, idx].set(pages.astype(leaf.dtype), mode="drop")
     return {k: s(v, rows[k]) for k, v in paged.items()}
+
+
+# --------------------------------------------------------------------- #
+# Page movement — COW forks and the host swap tier.  All device work is
+# jitted with power-of-two-padded id vectors (sentinel-padded: `fill`
+# gathers zeros, `drop` scatters discard), so trace count stays
+# logarithmic in swap size instead of one trace per page count.
+
+def _pad_ids(ids, sentinel: int) -> np.ndarray:
+    n = max(len(ids), 1)
+    m = 1
+    while m < n:
+        m <<= 1
+    out = np.full((m,), sentinel, np.int32)
+    out[:len(ids)] = ids
+    return out
+
+
+@jax.jit
+def _gather_page_blocks(leaf, idx):
+    return jnp.take(leaf, idx, axis=1, mode="fill", fill_value=0)
+
+
+@jax.jit
+def _scatter_page_blocks(leaf, idx, blocks):
+    return leaf.at[:, idx].set(blocks.astype(leaf.dtype), mode="drop")
+
+
+def copy_pages(paged: Dict, src_ids, dst_ids) -> Dict:
+    """Device-side page copy (the COW fork data move): physical pages
+    `src_ids` are duplicated into `dst_ids`, leaf by leaf.  One jitted
+    gather + one jitted scatter; no host sync."""
+    sentinel = next(iter(paged.values())).shape[1]
+    src = jnp.asarray(_pad_ids(src_ids, sentinel))
+    dst = jnp.asarray(_pad_ids(dst_ids, sentinel))
+    return {k: _scatter_page_blocks(v, dst, _gather_page_blocks(v, src))
+            for k, v in paged.items()}
+
+
+def take_pages(paged: Dict, page_ids) -> Dict:
+    """Swap-out data move: gather physical pages on device (jitted), then
+    one `device_get` for the whole block set.  Returns
+    `{leaf: np(layers, n, page_size, ...)}` host arrays."""
+    sentinel = next(iter(paged.values())).shape[1]
+    idx = jnp.asarray(_pad_ids(page_ids, sentinel))
+    gathered = {k: _gather_page_blocks(v, idx) for k, v in paged.items()}
+    host = jax.device_get(gathered)       # the ONE sync of a swap-out
+    n = len(page_ids)
+    return {k: v[:, :n] for k, v in host.items()}
+
+
+def put_pages(paged: Dict, page_ids, host_blocks: Dict) -> Dict:
+    """Swap-in data move: `device_put` the host blocks and scatter them
+    into physical pages `page_ids` (jitted; async, no host sync)."""
+    sentinel = next(iter(paged.values())).shape[1]
+    padded = _pad_ids(page_ids, sentinel)
+    idx = jnp.asarray(padded)
+    out = {}
+    for k, leaf in paged.items():
+        blk = host_blocks[k]
+        pad = len(padded) - blk.shape[1]
+        if pad:
+            widths = [(0, 0), (0, pad)] + [(0, 0)] * (blk.ndim - 2)
+            blk = np.pad(blk, widths)
+        out[k] = _scatter_page_blocks(leaf, idx, jax.device_put(blk))
+    return out
 
 
 # --------------------------------------------------------------------- #

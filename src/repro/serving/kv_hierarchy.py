@@ -1,0 +1,480 @@
+"""Hierarchical KV memory: refcounted prefix cache + host swap tier.
+
+PR 5's `PagedKVPool` manages *live* KV only — every request pays full
+prefill, and page-exhaustion preemption throws the victim's context away
+and re-prefills O(context) on resume.  This module adds the two layers
+that turn the paged pool into a memory *hierarchy* (AIBrix's KV offload
+pool and SLINFER's constrained-memory argument, see PAPERS.md):
+
+* `PrefixCache` — cross-request **prefix reuse**.  Finished requests
+  donate their page-aligned leading blocks into a chained-hash index
+  (keyed per tenant-visibility salt); at admission the engine matches
+  the longest cached prefix, maps the shared physical pages read-only
+  into the new slot's page table (refcount bump, zero copies), and
+  prefills only the suffix.  Unreferenced entries are LRU-evicted to
+  feed the free list before admission blocks — optionally *demoted* to
+  the host tier instead of dropped.
+* `HostPagePool` — a bounded **host-DRAM page tier**.  Swap-out gathers
+  a victim's private pages on device and lands them host-side with one
+  `device_get`; swap-in is a `device_put` + jitted scatter.  Preemption
+  under page pressure then moves O(pages) instead of recomputing
+  O(context), and idle-but-live multi-turn slots can be parked off
+  device and restored on the next turn with zero re-prefill.
+
+Tier order on a miss: device pages -> host pool -> recompute.  All data
+movement happens at admission/preemption boundaries — the fused decode
+hot path never sees a cache lookup or a swap (PR 2's dispatch/host-sync
+discipline is preserved, CI-gated).
+
+Safety: only *full* page-aligned blocks are ever shared, and the engine
+caps a match below the request's last prompt token, so decode writes
+always land in private pages; `PagedKVPool.write_table()` masks shared
+pages to the scatter sentinel as a second line of defense, and
+`cow_page` + `copy_pages` fork a private copy if a write must land in a
+shared page.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.kv_cache import (PagedKVPool, put_pages, take_pages)
+
+
+# --------------------------------------------------------------------- #
+class HostPagePool:
+    """Bounded host-DRAM page store (tier 2).  Pages here are plain
+    numpy blocks `{leaf: (layers, page_size, ...)}` keyed by host page
+    id; the id space is disjoint from the device pool's by construction
+    (separate free lists, property-tested)."""
+
+    def __init__(self, n_pages: int):
+        self.n_pages = int(n_pages)
+        self.free_ids: List[int] = list(range(self.n_pages))[::-1]
+        self._store: Dict[int, Dict] = {}
+        self.swapped_out = 0          # pages landed host-side
+        self.swapped_in = 0           # pages restored to device
+
+    @property
+    def in_use(self) -> int:
+        return self.n_pages - len(self.free_ids)
+
+    def can_hold(self, n: int) -> bool:
+        return n <= len(self.free_ids)
+
+    def put(self, blocks: Dict, n: int) -> Optional[List[int]]:
+        """Store `n` pages from stacked host blocks
+        `{leaf: (layers, n, page_size, ...)}`.  All-or-nothing."""
+        if n > len(self.free_ids):
+            return None
+        ids = [self.free_ids.pop() for _ in range(n)]
+        for i, hid in enumerate(ids):
+            self._store[hid] = {k: v[:, i] for k, v in blocks.items()}
+        self.swapped_out += n
+        return ids
+
+    def get(self, ids: List[int]) -> Dict:
+        """Stack stored pages back into `{leaf: (layers, n, ...)}` host
+        blocks (the `put_pages` upload format)."""
+        out: Dict = {}
+        for k in (self._store[ids[0]].keys() if ids else ()):
+            out[k] = np.stack([self._store[h][k] for h in ids], axis=1)
+        return out
+
+    def free(self, ids: List[int]):
+        for hid in ids:
+            if hid not in self._store:
+                raise ValueError(f"free of unallocated host page {hid}")
+            del self._store[hid]
+            self.free_ids.append(hid)
+
+    def release(self, ids: List[int], restored: bool = False):
+        self.free(ids)
+        if restored:
+            self.swapped_in += len(ids)
+
+
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class SwapHandle:
+    """Everything needed to rebuild a parked slot's KV without a model
+    forward: which table indices keep live device pages (shared prefix
+    blocks the handle holds references on) and which moved to the host
+    tier.  Engine-visible decode state (last token, sampling budget,
+    position) is reconstructed host-side by the engine."""
+    request_id: int
+    n_tokens: int                       # pool.lengths at detach
+    kept: List[Tuple[int, int]]         # (table index, device page id)
+    host: List[Tuple[int, int]]         # (table index, host page id)
+
+    @property
+    def n_pages(self) -> int:
+        return len(self.kept) + len(self.host)
+
+
+def swap_out_slot(pool: PagedKVPool, host: HostPagePool, paged: Dict,
+                  slot: int) -> Optional[SwapHandle]:
+    """Park `slot` off-device: detach its page table row, keep device
+    references on shared pages (refs > 1 — the prefix-cache blocks,
+    which other slots may be reading), and move the private pages to the
+    host tier with one jitted gather + one `device_get`.  Returns None —
+    leaving the slot untouched — when the host pool cannot hold the
+    private pages (caller falls back to recompute-preemption)."""
+    pages = pool.slot_pages.get(slot)
+    if pages is None:
+        return None
+    n_tokens = pool.lengths[slot]
+    request_id = pool.owners[slot]
+    private = [(i, p) for i, p in enumerate(pages)
+               if pool.refs.get(p, 1) == 1]
+    if not host.can_hold(len(private)):
+        return None
+    pages = pool.detach(slot)           # handle now owns every reference
+    kept = [(i, p) for i, p in enumerate(pages)
+            if pool.refs.get(p, 1) > 1]
+    priv_ids = [p for i, p in enumerate(pages)
+                if pool.refs.get(p, 1) == 1]
+    priv_idx = [i for i, p in enumerate(pages)
+                if pool.refs.get(p, 1) == 1]
+    host_ids: List[int] = []
+    if priv_ids:
+        blocks = take_pages(paged, priv_ids)    # the one swap-out sync
+        host_ids = host.put(blocks, len(priv_ids))
+        for p in priv_ids:
+            pool.free_page(p)
+    return SwapHandle(request_id=request_id, n_tokens=n_tokens, kept=kept,
+                      host=list(zip(priv_idx, host_ids)))
+
+
+def swap_in_slot(pool: PagedKVPool, host: HostPagePool, paged: Dict,
+                 handle: SwapHandle) -> Optional[Tuple[int, Dict]]:
+    """Restore a parked slot: claim fresh device pages for the host-tier
+    blocks, `device_put` + scatter them in (async), and re-attach the
+    full page list to a fresh slot.  Returns `(slot, updated_paged)` —
+    the caller swaps the updated leaves into its cache — or None
+    (handle intact) when slots or pages are short."""
+    if not pool.free_slots:
+        return None
+    fresh = pool.alloc_pages(len(handle.host))
+    if fresh is None:
+        return None
+    table: Dict[int, int] = dict(handle.kept)
+    new_paged = paged
+    if handle.host:
+        hids = [h for _, h in handle.host]
+        new_paged = put_pages(paged, fresh, host.get(hids))
+        host.release(hids, restored=True)
+        for (i, _), p in zip(handle.host, fresh):
+            table[i] = p
+    pages = [table[i] for i in sorted(table)]
+    slot = pool.attach(handle.request_id, pages, handle.n_tokens)
+    if slot is None:                    # raced out of slots: undo pages
+        for p in fresh:
+            pool.free_page(p)
+        # host copies are gone; re-park the restored blocks
+        if handle.host:
+            blocks = take_pages(new_paged, fresh)
+            hids = host.put(blocks, len(fresh))
+            handle.host = [(i, h) for (i, _), h
+                           in zip(handle.host, hids)]
+        return None
+    return slot, new_paged
+
+
+def drop_handle(pool: PagedKVPool, host: HostPagePool,
+                handle: SwapHandle):
+    """Abandon a parked request (cancel/failure): drop the handle's
+    device references and host pages."""
+    for _, p in handle.kept:
+        pool.free_page(p)
+    if handle.host:
+        host.free([h for _, h in handle.host])
+    handle.kept, handle.host = [], []
+
+
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class _Entry:
+    key: tuple                          # (salt, parent id, block tokens)
+    tokens: tuple                       # the block's token ids
+    page: Optional[int]                 # device physical page (tier 1)
+    host_id: Optional[int]              # host pool page (tier 2)
+    parent: Optional["_Entry"]
+    depth: int                          # block index from the root
+    eid: int = 0
+    users: int = 0                      # live request bindings
+    children: int = 0
+    tick: int = 0                       # LRU clock
+
+    @property
+    def tier(self) -> str:
+        return "device" if self.page is not None else "host"
+
+
+class PrefixCache:
+    """Refcounted, copy-on-write prefix index over page-aligned token
+    blocks.  Entries form chains (each block keyed by its parent), so a
+    lookup walks block-by-block from the root and a match is always a
+    *prefix* of full pages.  `users` counts live requests whose slots
+    map the entry's page; only `users == 0` leaves are evictable, LRU
+    first — demoted to the host tier when one is attached, dropped
+    otherwise."""
+
+    def __init__(self, pool: PagedKVPool,
+                 host: Optional[HostPagePool] = None,
+                 max_device_pages: int = 0,
+                 share_tenants: bool = False):
+        self.pool = pool
+        self.host = host
+        self.page_size = pool.page_size
+        # 0 => no explicit cap: bounded by the pool + demand reclaim
+        self.max_device_pages = int(max_device_pages)
+        self.share_tenants = share_tenants
+        self._index: Dict[tuple, _Entry] = {}
+        self._bound: Dict[int, List[_Entry]] = {}   # request -> entries
+        self._ids = 0
+        self._clock = 0
+        # request-level counters (the admin/bench `cache_hit_rate`)
+        self.lookups = 0
+        self.hits = 0
+        self.matched_tokens = 0
+        self.inserted_pages = 0
+        self.evictions = 0
+        self.demotions = 0
+        self.promotions = 0
+
+    # ---- keying --------------------------------------------------- #
+    def _salt(self, tenant: str) -> str:
+        return "" if self.share_tenants else (tenant or "")
+
+    def _key(self, salt: str, parent: Optional[_Entry],
+             block: tuple) -> tuple:
+        return (salt, parent.eid if parent else -1, block)
+
+    def _touch(self, e: _Entry):
+        self._clock += 1
+        e.tick = self._clock
+
+    # ---- metrics -------------------------------------------------- #
+    @property
+    def device_pages(self) -> int:
+        return sum(1 for e in self._index.values() if e.page is not None)
+
+    @property
+    def host_pages(self) -> int:
+        return sum(1 for e in self._index.values()
+                   if e.host_id is not None)
+
+    def evictable_device_pages(self) -> int:
+        """Device pages the cache is *guaranteed* to hand back on demand
+        — the admission budget and the autoscaler net these out.  Counts
+        exactly the entries `reclaim` can evict right now (unpinned
+        leaves); interior entries freed by cascade are a bonus, never a
+        promise, so the budget can't overcommit against pages a
+        host-tier child keeps pinned."""
+        return len(self._evictable())
+
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "entries": len(self._index),
+            "device_pages": self.device_pages,
+            "host_pages": self.host_pages,
+            "evictable_pages": self.evictable_device_pages(),
+            "lookups": self.lookups,
+            "hits": self.hits,
+            "hit_rate": self.hit_rate(),
+            "matched_tokens": self.matched_tokens,
+            "inserted_pages": self.inserted_pages,
+            "evictions": self.evictions,
+            "demotions": self.demotions,
+            "promotions": self.promotions,
+        }
+
+    # ---- lookup / bind -------------------------------------------- #
+    def peek(self, tenant: str, tokens, limit_tokens: int) -> int:
+        """Non-mutating match length in tokens (device tier only) — the
+        scheduler's page-reservation netting; no counters, no LRU
+        touches, no promotions."""
+        salt = self._salt(tenant)
+        parent: Optional[_Entry] = None
+        ps = self.page_size
+        n = 0
+        for b in range(max(limit_tokens, 0) // ps):
+            block = tuple(tokens[b * ps:(b + 1) * ps])
+            e = self._index.get(self._key(salt, parent, block))
+            if e is None or e.tokens != block or e.page is None:
+                break
+            n += 1
+            parent = e
+        return n * ps
+
+    def match(self, tenant: str, tokens, limit_tokens: int,
+              paged: Optional[Dict] = None):
+        """Longest cached prefix of `tokens`, in *full* page blocks,
+        never exceeding `limit_tokens`.  Device-tier entries are mapped
+        for free; host-tier entries are promoted back to device pages
+        when `paged` is given and a page is claimable (one `device_put`
+        + scatter, no sync), else the walk stops there.  Returns
+        `(entries, matched_tokens, updated_paged_or_None)`."""
+        self.lookups += 1
+        salt = self._salt(tenant)
+        out: List[_Entry] = []
+        new_paged = None
+        parent: Optional[_Entry] = None
+        ps = self.page_size
+        max_blocks = max(limit_tokens, 0) // ps
+        for b in range(max_blocks):
+            block = tuple(tokens[b * ps:(b + 1) * ps])
+            e = self._index.get(self._key(salt, parent, block))
+            if e is None or e.tokens != block:
+                break
+            if e.page is None:          # host tier: promote or stop
+                if paged is None or self.host is None:
+                    break
+                src = new_paged if new_paged is not None else paged
+                promoted = self._promote(e, src)
+                if promoted is None:
+                    break
+                new_paged = promoted
+            self._touch(e)
+            out.append(e)
+            parent = e
+        if out:
+            self.hits += 1
+            self.matched_tokens += len(out) * ps
+        return out, len(out) * ps, new_paged
+
+    def _promote(self, e: _Entry, paged: Dict) -> Optional[Dict]:
+        """Host -> device: claim a page (reclaiming LRU cache pages if
+        the pool is dry), upload the stored block, rewrite the entry."""
+        claimed = self.pool.alloc_pages(1)
+        if claimed is None:
+            if self.reclaim(1, paged) < 1:
+                return None
+            claimed = self.pool.alloc_pages(1)
+            if claimed is None:
+                return None
+        page = claimed[0]
+        new_paged = put_pages(paged, [page], self.host.get([e.host_id]))
+        self.host.release([e.host_id], restored=True)
+        e.host_id, e.page = None, page
+        self.promotions += 1
+        return new_paged
+
+    def bind(self, request_id: int, entries: List[_Entry]):
+        """Pin `entries` for a live request (its slot maps their pages);
+        pinned entries are not evictable."""
+        if not entries:
+            return
+        for e in entries:
+            e.users += 1
+        self._bound[request_id] = list(entries)
+
+    def unbind(self, request_id: int):
+        for e in self._bound.pop(request_id, ()):
+            e.users -= 1
+
+    # ---- insert ---------------------------------------------------- #
+    def insert(self, tenant: str, tokens, n_tokens: int,
+               slot_pages: List[int]) -> int:
+        """Donate a finishing slot's full page-aligned blocks to the
+        cache: existing entries are refreshed, new blocks `retain` the
+        slot's physical page (so the subsequent `pool.release` leaves
+        the cache holding the last reference).  Returns pages newly
+        cached."""
+        salt = self._salt(tenant)
+        ps = self.page_size
+        parent: Optional[_Entry] = None
+        added = 0
+        for b in range(min(n_tokens // ps, len(slot_pages))):
+            block = tuple(tokens[b * ps:(b + 1) * ps])
+            key = self._key(salt, parent, block)
+            e = self._index.get(key)
+            if e is None:
+                if self.max_device_pages and \
+                        self.device_pages >= self.max_device_pages and \
+                        self.reclaim(1) < 1:
+                    break               # cap reached, nothing evictable
+                page = slot_pages[b]
+                self.pool.retain(page)
+                self._ids += 1
+                e = _Entry(key=key, tokens=block, page=page, host_id=None,
+                           parent=parent, depth=b, eid=self._ids)
+                self._index[key] = e
+                if parent is not None:
+                    parent.children += 1
+                self.inserted_pages += 1
+                added += 1
+            self._touch(e)
+            parent = e
+        return added
+
+    # ---- eviction -------------------------------------------------- #
+    def _evictable(self) -> List[_Entry]:
+        return sorted((e for e in self._index.values()
+                       if e.users == 0 and e.children == 0
+                       and e.page is not None),
+                      key=lambda e: e.tick)
+
+    def _drop(self, e: _Entry, demote_paged: Optional[Dict]):
+        """Remove one leaf entry, demoting its block to the host tier
+        when possible (so a later match can promote it back) else
+        dropping it outright."""
+        if e.page is not None:
+            if demote_paged is not None and self.host is not None \
+                    and self.host.can_hold(1):
+                blocks = take_pages(demote_paged, [e.page])
+                e.host_id = self.host.put(blocks, 1)[0]
+                self.demotions += 1
+                self.pool.free_page(e.page)
+                e.page = None
+                return                  # entry lives on, host tier
+            self.pool.free_page(e.page)
+            e.page = None
+        if e.host_id is not None:
+            self.host.free([e.host_id])
+            e.host_id = None
+        del self._index[e.key]
+        if e.parent is not None:
+            e.parent.children -= 1
+        self.evictions += 1
+
+    def reclaim(self, n_pages: int,
+                demote_paged: Optional[Dict] = None) -> int:
+        """Free up to `n_pages` device pages by LRU-evicting unpinned
+        leaf entries (cascading up chains as leaves clear).  With
+        `demote_paged`, evicted blocks demote to the host tier (one
+        gather + `device_get` each) instead of vanishing.  Returns pages
+        actually freed — the engine calls this before admission blocks
+        or preempts."""
+        freed = 0
+        while freed < n_pages:
+            victims = self._evictable()
+            if not victims:
+                break
+            for e in victims:
+                if freed >= n_pages:
+                    break
+                self._drop(e, demote_paged)
+                freed += 1
+        return freed
+
+    def flush(self) -> Dict[str, int]:
+        """Drop every unpinned entry (device and host tiers) — the
+        `/v1/admin/cache/flush` verb and the deterministic-test reset.
+        Pinned entries (live slots still read their pages) survive."""
+        dropped = 0
+        while True:
+            leaves = [e for e in self._index.values()
+                      if e.users == 0 and e.children == 0]
+            if not leaves:
+                break
+            for e in leaves:
+                self._drop(e, None)
+                dropped += 1
+        return {"flushed": dropped, "remaining": len(self._index)}

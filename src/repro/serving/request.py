@@ -64,6 +64,11 @@ class Request:
     node: str = ""
     replica: str = ""
     retries: int = 0
+    # cumulative WFQ virtual-clock debit this request has paid on its
+    # current replica — lets the scheduler charge served tokens exactly
+    # once across preempt/resume cycles instead of re-billing the
+    # remaining budget at every re-admission
+    wfq_charged: float = 0.0
     # streaming hooks (set by the Gateway; None => no-op)
     on_token: Optional[Callable[["Request", int], None]] = \
         dataclasses.field(default=None, repr=False)
@@ -127,3 +132,5 @@ class Request:
         self.error_code = ""
         self.finished_at = None
         self._finish_fired = False
+        # the next replica runs its own WFQ clock: its charge starts over
+        self.wfq_charged = 0.0

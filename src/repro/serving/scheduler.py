@@ -94,6 +94,19 @@ class Scheduler:
         when tenants mix prompt lengths and budgets."""
         return float(max(req.sampling.max_tokens - len(req.output), 1))
 
+    def _charge(self, req: Request) -> float:
+        """Exactly-once admission debit.  The projected lifetime service
+        (tokens already generated + remaining budget) is billed net of
+        what this request already paid, so a preempted-then-resumed
+        request — whose first admission billed its full budget — adds
+        ~nothing on re-admission instead of re-billing the remainder
+        and drifting its tenant's virtual clock ahead of the tokens
+        actually served."""
+        projected = float(len(req.output)) + self._cost(req)
+        delta = max(projected - req.wfq_charged, 0.0)
+        req.wfq_charged += delta
+        return delta
+
     def _pages(self, req: Request) -> float:
         if self.pages_for is None:
             return 0.0
@@ -236,7 +249,7 @@ class Scheduler:
             budget = (free_pages - self._pages(head)
                       if free_pages is not None else None)
             self._vtime[best] = self._vtime.get(best, 0.0) \
-                + self._cost(head) / w
+                + self._charge(head) / w
             out = [head]
             if n > 1:
                 hb = bucket_of(self._eff_len(head))
@@ -249,7 +262,7 @@ class Scheduler:
                         out.append(req)
                         self._depth -= 1
                         self._unreserve(req)
-                        self._vtime[best] += self._cost(req) / w
+                        self._vtime[best] += self._charge(req) / w
                         if budget is not None:
                             budget -= self._pages(req)
                     else:

@@ -472,7 +472,92 @@ def test_tenant_quota_admin_roundtrip(client):
     assert "acme" not in client.tenant_quotas()
 
 
+# -------------------- stale-connection retry ----------------------- #
+class _FakeSock:
+    def __init__(self):
+        self.data = b""
+
+    def sendall(self, b):
+        self.data += b
+
+    def close(self):
+        pass
+
+
+class _FlakyConn:
+    """Connection whose first `request` dies with OSError — optionally
+    after pushing bytes onto the wire (the stale keep-alive case)."""
+
+    def __init__(self, send_bytes=True):
+        self.sock = None
+        self.attempts = 0
+        self._failed = False
+        self._send = send_bytes
+
+    def connect(self):
+        self.sock = _FakeSock()
+
+    def request(self, method, path, body=None, headers=None):
+        self.attempts += 1
+        if not self._failed:
+            self._failed = True
+            if self._send:
+                self.sock.sendall(b"POST /x HTTP/1.1\r\n")
+            raise OSError(104, "connection reset by peer")
+        self.sock.sendall(b"ok")
+
+    def getresponse(self):
+        class _R:
+            status = 200
+            headers = {}
+
+            def read(self):
+                return b"{}"
+        return _R()
+
+    def close(self):
+        self.sock = None
+
+
+def _patched_client(conn):
+    c = HTTPClient("http://127.0.0.1:1")
+    c._connection = lambda: conn
+    return c
+
+
+def test_post_with_bytes_on_wire_is_not_retried():
+    """A send error after request bytes reached the socket may still
+    have delivered the whole request — blind-retrying a generation POST
+    there could double-submit and double-charge it, so the client must
+    surface the error instead."""
+    conn = _FlakyConn(send_bytes=True)
+    with pytest.raises(OSError):
+        _patched_client(conn)._json("POST", "/v1/completions", {"x": 1})
+    assert conn.attempts == 1
+
+
+def test_get_and_zero_byte_post_failures_are_retried():
+    """Idempotent GETs always retry once; a POST whose send died before
+    any byte left the client cannot have been acted on, so it retries
+    too."""
+    conn = _FlakyConn(send_bytes=True)
+    assert _patched_client(conn)._json("GET", "/healthz") == {}
+    assert conn.attempts == 2
+    conn = _FlakyConn(send_bytes=False)
+    assert _patched_client(conn)._json("POST", "/v1/x", {"x": 1}) == {}
+    assert conn.attempts == 2
+
+
 # -------------------- admin over the wire -------------------------- #
+def test_admin_cache_flush_over_wire(client):
+    """The flush verb round-trips; engines deployed without a prefix
+    cache report zero flushed/remaining."""
+    res = client.admin_cache_flush()
+    assert res == {"flushed": 0, "remaining": 0}
+    res = client.admin_cache_flush(MODEL)
+    assert set(res) == {"flushed", "remaining"}
+
+
 def test_admin_snapshot_and_scale(client):
     snap = client.admin_snapshot()
     assert snap["connected"] == 2

@@ -1,0 +1,284 @@
+"""Hierarchical KV memory: refcounted prefix cache + host swap tier.
+
+Greedy parity with caching on/off and across swap-out/swap-in cycles at
+every fused-block size, suffix-only prefill on cache hits (proportional
+dispatch-token reduction), zero re-prefill on swap resume, allocator
+refcount properties (no leak, no double free, disjoint free lists), and
+the cache section of the admin snapshot plus the flush verb."""
+import numpy as np
+import pytest
+
+from repro.api import Gateway
+from repro.cluster import BackendNode, Fleet
+from repro.configs import ARCHS
+from repro.core import (ModelCatalog, ReplicaInfo, ReplicaKey,
+                        SDAIController)
+from repro.serving import (EngineConfig, InferenceEngine, Request,
+                           SamplingParams)
+from repro.serving.kv_cache import PagedKVPool
+from repro.serving.kv_hierarchy import (HostPagePool, swap_in_slot,
+                                        swap_out_slot)
+
+from tests._hypothesis_compat import given, settings, st
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return ARCHS["olmo-1b"].reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg, param_store):
+    return param_store(cfg)
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("n_slots", 4)
+    kw.setdefault("max_len", 48)
+    return InferenceEngine(cfg, params, EngineConfig(**kw))
+
+
+def _run(eng, reqs, max_steps=10_000):
+    for r in reqs:
+        assert eng.submit(r)
+    eng.run_until_done(max_steps)
+    return [tuple(r.output) for r in reqs]
+
+
+def _serial(eng, prompts, max_tokens=8):
+    """Submit one request at a time so every later request sees the
+    prefix pages the earlier ones inserted at finish."""
+    outs = []
+    for p in prompts:
+        r = Request(model="m", prompt=list(p),
+                    sampling=SamplingParams(max_tokens=max_tokens))
+        assert eng.submit(r)
+        eng.run_until_done()
+        outs.append(tuple(r.output))
+    return outs
+
+
+def _work(n=6, max_tokens=20):
+    return [Request(model="m", prompt=list(range(1, 3 + i)),
+                    sampling=SamplingParams(max_tokens=max_tokens))
+            for i in range(n)]
+
+
+SHARED = list(range(1, 25))            # 24 tokens = 3 pages at size 8
+
+
+# ------------------- prefix cache ----------------------------------- #
+@pytest.mark.parametrize("k", [1, 4, 8])
+def test_prefix_cache_greedy_parity(cfg, params, k):
+    """Greedy outputs must be token-for-token identical with the prefix
+    cache on and off at every fused-block size: mapping cached pages
+    into a new slot's table is a memory optimization, never a numerics
+    change."""
+    prompts = [SHARED + [30, 31],          # cold: populates the cache
+               SHARED + [40, 41, 42],      # full 3-page hit
+               SHARED[:12] + [7]]          # partial 1-page hit
+    ref = _serial(_engine(cfg, params, decode_block=k, page_size=8),
+                  prompts)
+    eng = _engine(cfg, params, decode_block=k, page_size=8,
+                  prefix_cache=True)
+    assert _serial(eng, prompts) == ref
+    assert eng.prefix_cache.hits >= 2
+    assert eng.suffix_prefills >= 2
+    # flush releases every cached page; nothing leaks
+    res = eng.flush_prefix_cache()
+    assert res["flushed"] > 0 and res["remaining"] == 0
+    assert eng.pool.pages_in_use == 0
+
+
+def test_second_request_prefills_only_suffix(cfg, params):
+    """A request sharing a 3-page prefix with a cached one must prefill
+    only its 8-token suffix bucket, not the full 32-token prompt — the
+    dispatch-token counter shows the proportional reduction."""
+    p1 = SHARED + [30] * 8                 # 32 tokens
+    p2 = SHARED + [40] * 8                 # shares the first 24
+    eng = _engine(cfg, params, page_size=8, decode_block=4,
+                  prefix_cache=True)
+    _serial(eng, [p1], max_tokens=4)
+    cold = eng.prefill_dispatch_tokens
+    _serial(eng, [p2], max_tokens=4)
+    warm = eng.prefill_dispatch_tokens - cold
+    assert eng.prefix_cache.matched_tokens == 24
+    assert eng.suffix_prefills == 1
+    assert warm * 4 <= cold                # 8-token suffix vs 32 full
+    # the cold path costs exactly what a cache-off engine pays
+    off = _engine(cfg, params, page_size=8, decode_block=4)
+    _serial(off, [p1], max_tokens=4)
+    assert cold == off.prefill_dispatch_tokens
+
+
+# ------------------- host swap tier --------------------------------- #
+@pytest.mark.parametrize("k", [1, 4, 8])
+def test_swap_cycle_greedy_parity_and_zero_reprefill(cfg, params, k):
+    """Oversubscribed pages with a host tier: preempted slots park on
+    host DRAM and resume by scatter — outputs identical to the
+    recompute engine (itself parity-checked against uncontended), every
+    eviction swapped instead of recomputed, and strictly less prefill
+    traffic than recompute-on-resume pays."""
+    base = _engine(cfg, params, n_slots=6, page_size=8, kv_pages=18,
+                   decode_block=k)
+    ref = _run(base, _work())
+    assert base.preemptions >= 1           # contention actually happened
+    swap = _engine(cfg, params, n_slots=6, page_size=8, kv_pages=18,
+                   decode_block=k, host_kv_pages=64)
+    reqs = _work()
+    assert _run(swap, reqs) == ref
+    assert swap.preemptions >= 1
+    assert swap.swap_outs == swap.preemptions    # every eviction parked
+    assert swap.swap_ins == swap.swap_outs       # every park resumed
+    # zero re-prefill on resume: the recompute engine re-pays prefill
+    # for each preempted request, the swap engine never does
+    assert swap.prefill_dispatch_tokens < base.prefill_dispatch_tokens
+    # both tiers drain clean
+    assert swap.pool.pages_in_use == 0
+    assert swap.host_pool.in_use == 0
+
+
+def test_swap_roundtrip_preserves_pages_and_freelists_disjoint():
+    """Unit-level swap-out/swap-in: page payloads survive the host
+    round-trip bit-identically, handle pages never appear on the device
+    free list, and host ids come from the host pool's own id space."""
+    import jax
+    import jax.numpy as jnp
+    pool = PagedKVPool(n_slots=2, max_len=32, page_size=4, n_pages=16)
+    host = HostPagePool(8)
+    paged = {"k": jax.random.normal(jax.random.PRNGKey(0),
+                                    (2, 16, 4, 1, 3))}
+    s = pool.alloc(1, 10)                  # 3 pages
+    before = {i: np.asarray(paged["k"][:, p])
+              for i, p in enumerate(pool.slot_pages[s])}
+    handle = swap_out_slot(pool, host, paged, s)
+    assert handle is not None and handle.n_tokens == 10
+    assert pool.n_active == 0
+    assert host.in_use == len(handle.host) == 3
+    held = {p for _, p in handle.kept}
+    assert set(pool.free_pages).isdisjoint(held)
+    assert {h for _, h in handle.host} <= set(host._store)
+    restored = swap_in_slot(pool, host, paged, handle)
+    assert restored is not None
+    slot, paged2 = restored
+    assert pool.lengths[slot] == 10
+    for i, p in enumerate(pool.slot_pages[slot]):
+        assert np.array_equal(np.asarray(paged2["k"][:, p]), before[i])
+    assert host.in_use == 0
+    assert host.swapped_out == host.swapped_in == 3
+    pool.release(slot)
+    assert pool.pages_in_use == 0
+
+
+# ------------------- allocator properties --------------------------- #
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(1, 40)),
+                min_size=1, max_size=40))
+def test_refcounted_pool_no_leak_no_double_free(ops):
+    """Random alloc/share/release/orphan traffic: the free list never
+    holds duplicates or referenced pages, refcounts never hit zero
+    while tracked, and full teardown returns every page exactly once."""
+    pool = PagedKVPool(n_slots=6, max_len=64, page_size=8, n_pages=48)
+    rid = iter(range(100_000))
+    live, orphans = [], []
+    for op, n in ops:
+        if op == 0:                        # alloc, maybe sharing pages
+            shared = []
+            if live:
+                donor = pool.slot_pages[live[0]]
+                shared = list(donor[:min(len(donor), n % 3)])
+            want = len(shared) * 8 + (n % 8) + 1
+            s = pool.alloc(next(rid), want, shared_pages=shared)
+            if s is not None:
+                live.append(s)
+        elif op == 1 and live:
+            pool.release(live.pop(n % len(live)))
+        elif op == 2:                      # cache-style orphan claims
+            pages = pool.alloc_pages(n % 4)
+            if pages:
+                orphans.append(pages)
+            elif orphans and n % 2:
+                for p in orphans.pop():
+                    pool.free_page(p)
+        free = pool.free_pages
+        assert len(set(free)) == len(free)            # no double free
+        assert set(free).isdisjoint(pool.refs)        # no free+live page
+        assert all(r >= 1 for r in pool.refs.values())
+    for s in live:
+        pool.release(s)
+    for pages in orphans:
+        for p in pages:
+            pool.free_page(p)
+    assert pool.pages_in_use == 0                     # no leak
+    assert sorted(pool.free_pages) == list(range(pool.n_pages))
+    assert not pool.refs
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(1, 6), min_size=1, max_size=25))
+def test_host_pool_ids_unique_and_accounted(sizes):
+    """Host-tier ids are handed out at most once while outstanding,
+    accounting tracks exactly, over-capacity puts fail atomically, and
+    double-free raises instead of corrupting the free list."""
+    host = HostPagePool(24)
+    held = []
+    for i, n in enumerate(sizes):
+        blocks = {"k": np.zeros((1, n, 2), dtype=np.float32)}
+        ids = host.put(blocks, n)
+        outstanding = [h for lst in held for h in lst]
+        if ids is None:
+            assert not host.can_hold(n)               # atomic failure
+            if held:
+                host.release(held.pop(0), restored=bool(i % 2))
+            continue
+        assert len(set(ids)) == len(ids)
+        assert set(ids).isdisjoint(outstanding)
+        held.append(ids)
+        assert host.in_use == len(outstanding) + len(ids)
+    for ids in held:
+        assert host.get(ids)["k"].shape[1] == len(ids)
+        host.release(ids, restored=True)
+    assert host.in_use == 0
+    assert sorted(host.free_ids) == list(range(24))
+    if sizes:
+        ids = host.put({"k": np.zeros((1, 1, 2), dtype=np.float32)}, 1)
+        host.free(ids)
+        with pytest.raises(ValueError):
+            host.free(ids)
+
+
+# ------------------- control plane ---------------------------------- #
+def test_admin_snapshot_cache_section_and_flush(cfg, param_store):
+    """The fleet snapshot carries the hierarchy metrics (hit rate, host
+    occupancy, swap counters) per instance, the legacy dict gains a
+    `cache` section, and the flush verb drops unpinned entries
+    fleet-wide."""
+    fleet = Fleet([BackendNode("n0", "v5e-1", param_store=param_store)])
+    catalog = ModelCatalog()
+    catalog.register(cfg)
+    ctrl = SDAIController(fleet, catalog)
+    ctrl.discover()
+    inst = fleet.nodes["n0"].deploy(cfg, n_slots=2, max_len=48,
+                                    prefix_cache=True, host_kv_pages=16)
+    ctrl.replicas.add(ReplicaInfo(ReplicaKey("n0", inst.instance_id),
+                                  cfg.name, "", 2, 48, inst.bytes))
+    gw = Gateway(ctrl)
+    shared = list(range(1, 17))
+    for tail in ([21, 22], [31, 32]):
+        h = gw.submit(cfg.name, shared + tail,
+                      SamplingParams(max_tokens=4))
+        assert h.result(timeout_s=60).ok
+    isnap = gw.admin.snapshot().nodes[0].instances[0]
+    assert isnap.host_pages == 16
+    assert isnap.host_pages_in_use == 0
+    assert isnap.cache_device_pages > 0
+    assert isnap.cache_evictable_pages > 0
+    assert isnap.cache_hit_rate > 0.0
+    wire = gw.admin.snapshot().to_dict()["agents"]["n0"]["instances"][0]
+    assert wire["cache"]["host_pages"] == 16
+    assert wire["cache"]["hit_rate"] == isnap.cache_hit_rate
+    res = gw.admin.flush_cache()
+    assert res["flushed"] > 0 and res["remaining"] == 0
+    assert inst.engine.pool.pages_in_use == 0
+    assert gw.admin.snapshot().nodes[0].instances[0].cache_device_pages \
+        == 0

@@ -260,6 +260,35 @@ def test_late_joiner_cannot_starve_incumbent():
         assert a_wins <= i // 2 + 1, order
 
 
+def test_preempted_resume_charges_wfq_exactly_once():
+    """A preempted-then-resumed request must advance its tenant's
+    virtual clock by its served tokens exactly once: the first
+    admission bills the full projected budget, so re-admission after
+    partial service bills ~nothing — the clock tracks tokens actually
+    served instead of drifting ahead by the remaining budget at every
+    preemption cycle."""
+    sched = Scheduler(SchedulerConfig(max_prefill_per_step=1))
+    req = Request(model="m", prompt=[1, 2], tenant="t",
+                  sampling=SamplingParams(max_tokens=10))
+    sched.submit(req)
+    assert sched.next_prefill_bucket(1, lambda n: 8) == [req]
+    v1 = sched._vtime["t"]
+    assert v1 == pytest.approx(10.0)       # full budget billed up front
+    req.output.extend([5] * 4)             # 4 tokens served, preempted
+    sched.requeue(req)
+    assert sched.next_prefill_bucket(1, lambda n: 8) == [req]
+    assert sched._vtime["t"] == pytest.approx(v1)    # no re-billing
+    # a second cycle after more service still adds nothing
+    req.output.extend([5] * 3)
+    sched.requeue(req)
+    sched.next_prefill_bucket(1, lambda n: 8)
+    assert sched._vtime["t"] == pytest.approx(v1)
+    # frontend failover moves the request to a fresh replica whose WFQ
+    # clock never saw it: the charge must start over there
+    req.reset_for_retry()
+    assert req.wfq_charged == 0.0
+
+
 def test_page_budget_gates_admission():
     """The scheduler admits nothing when no backlogged head fits the
     free-page budget, and respects the budget across a lookahead."""
