@@ -12,7 +12,15 @@ baseline.  Wall-clock metrics (tok/s, step percentiles) are
 machine-dependent and stay informational — they are printed but never
 gate.
 
+The ``availability`` section (written by ``bench_availability``) gates
+on absolutes, not baseline ratios: a survivable stream by definition
+loses and duplicates **zero** tokens across a mid-decode node kill, so
+``tokens_lost`` and ``tokens_duplicated`` must equal 0 and at least one
+migration must have happened.  Recovery latency is wall-clock and stays
+informational.
+
 Usage:  python benchmarks/check_regression.py \
+            [--only availability] \
             [BENCH_serving.json] [benchmarks/baseline_serving.json]
 """
 from __future__ import annotations
@@ -25,11 +33,56 @@ GATED_METRICS = ("dispatches_per_token", "host_syncs_per_token")
 BUDGET = 0.20                 # allowed relative regression
 
 
+def _check_availability(current, failures):
+    """Absolute gates on the chaos-soak section (when present)."""
+    avail = current.get("availability")
+    if avail is None:
+        return False
+    for metric in ("tokens_lost", "tokens_duplicated"):
+        c = avail.get(metric)
+        status = "FAIL" if c != 0 else "ok"
+        print(f"[{status}] availability.{metric}: current={c} (must be 0)")
+        if c != 0:
+            failures.append(f"availability.{metric} = {c} (must be 0)")
+    migrations = avail.get("migrations", 0)
+    status = "FAIL" if migrations < 1 else "ok"
+    print(f"[{status}] availability.migrations: current={migrations} "
+          f"(>= 1 — the soak must actually exercise migration)")
+    if migrations < 1:
+        failures.append("availability.migrations = 0 "
+                        "(chaos soak never exercised migration)")
+    print(f"[info] availability: faults_fired={avail.get('faults_fired')} "
+          f"recovery_mean_ms={avail.get('recovery_mean_us', 0) / 1e3:.1f} "
+          f"p95_ms={avail.get('recovery_p95_us', 0) / 1e3:.1f} "
+          f"max_ms={avail.get('recovery_max_us', 0) / 1e3:.1f}")
+    return True
+
+
 def main(argv):
-    current_path = Path(argv[1] if len(argv) > 1 else "BENCH_serving.json")
-    baseline_path = Path(argv[2] if len(argv) > 2
+    args = list(argv[1:])
+    only = None
+    if "--only" in args:                 # e.g. --only availability
+        i = args.index("--only")
+        only = args[i + 1] if i + 1 < len(args) else None
+        del args[i:i + 2]
+    current_path = Path(args[0] if args else "BENCH_serving.json")
+    baseline_path = Path(args[1] if len(args) > 1
                          else "benchmarks/baseline_serving.json")
     current = json.loads(current_path.read_text())
+
+    if only == "availability":           # chaos-soak job: absolute gates
+        failures = []
+        if not _check_availability(current, failures):
+            failures.append(
+                f"availability section missing from {current_path}")
+        if failures:
+            print("\nBench regression gate FAILED:")
+            for f in failures:
+                print(f"  - {f}")
+            return 1
+        print("\nBench regression gate passed.")
+        return 0
+
     baseline = json.loads(baseline_path.read_text())
 
     failures = []
@@ -124,6 +177,8 @@ def main(argv):
               f"inproc_req_per_s={http.get('inproc_req_per_s', 0):.1f} "
               f"inproc_p95_ttft_ms="
               f"{http.get('inproc_p95_ttft_ms', 0):.1f}")
+
+    _check_availability(current, failures)   # gates when section present
 
     if failures:
         print("\nBench regression gate FAILED:")

@@ -12,6 +12,7 @@ import dataclasses
 import time
 from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
+from repro.core.events import FAILURE_EVENT_KINDS
 from repro.core.frontend import TenantQuota
 from repro.core.placement import ModelDemand
 
@@ -94,6 +95,10 @@ class FleetSnapshot:
     utilization: float
     last_update: float
     tenants: Tuple[TenantSnapshot, ...] = ()
+    # failure-handling activity over the bus's retained window:
+    # migrations, watchdog trips, suspects, injected faults (kind -> n)
+    failure_events: Dict[str, int] = \
+        dataclasses.field(default_factory=dict)
 
     def node(self, node_id: str) -> Optional[NodeSnapshot]:
         for n in self.nodes:
@@ -144,6 +149,7 @@ class FleetSnapshot:
                            "tokens_charged": t.tokens_charged,
                            "refunds": t.refunds}
                 for t in self.tenants},
+            "failures": dict(self.failure_events),
             "last_update": self.last_update,
         }
 
@@ -251,7 +257,8 @@ class AdminAPI:
             connected=sum(1 for n in nodes if n.alive),
             total=len(nodes), nodes=tuple(nodes), models=models,
             routing=routing, utilization=c.fleet_utilization(),
-            last_update=c.clock(), tenants=tuple(tenants))
+            last_update=c.clock(), tenants=tuple(tenants),
+            failure_events=c.bus.counts(FAILURE_EVENT_KINDS))
 
     # ---- mutate -------------------------------------------------- #
     def flush_cache(self, model: Optional[str] = None) -> Dict[str, int]:

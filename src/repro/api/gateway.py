@@ -39,8 +39,9 @@ from repro.api.types import (APIError, ErrorCode, GenerationRequest,
                              GenerationResponse, StreamEvent,
                              StreamEventType, response_from_internal)
 from repro.core.controller import SDAIController
+from repro.core.events import REQUEST_MIGRATED
 from repro.serving.request import (CODE_CANCELLED, CODE_ENGINE_FAILED,
-                                   CODE_TIMEOUT, Request)
+                                   CODE_TIMEOUT, Request, RequestState)
 from repro.serving.sampler import SamplingParams
 
 
@@ -52,9 +53,12 @@ class GatewayConfig:
     # liveness: wall-clock budget for blocking waits (result / stream /
     # generate_batch); per-call `timeout_s` overrides
     default_timeout_s: float = 60.0
-    # transparent re-route of a streaming request whose backend died
-    # before emitting any token (after first token the failure surfaces
-    # as a structured ERROR event instead — we never re-emit tokens)
+    # transparent recovery budget for a request whose backend died:
+    # before the first token the request is re-routed fresh; after it,
+    # the emitted-token journal migrates to a surviving replica and the
+    # stream resumes where it left off — tokens are never re-emitted.
+    # Only when no healthy replica remains (or the budget is spent) does
+    # the failure surface as a structured ERROR event.
     max_stream_retries: int = 2
 
 
@@ -66,7 +70,8 @@ class GatewayStats:
     rejected_draining: int = 0
     rejected_rate_limited: int = 0
     cancelled: int = 0
-    stream_retries: int = 0
+    stream_retries: int = 0    # pre-token re-routes (fresh request)
+    migrations: int = 0        # mid-stream journal migrations
     timeouts: int = 0
     caller_pumps: int = 0      # hand-pump fallback iterations; stays 0
                                # while the runtime drives the fleet
@@ -113,21 +118,62 @@ class GenerationHandle:
         if req is not self.internal or self._done:
             return
         if (req.error_code == CODE_ENGINE_FAILED and not req.cancelled
-                and self._emitted == 0 and self._retries_left > 0):
-            # backend died before the stream produced anything: re-route
-            # transparently on a fresh internal request
-            self._retries_left -= 1
-            with self._gw._stats_lock:
-                self._gw.stats.stream_retries += 1
-            retry = self._gw._make_internal(self.request, self)
-            retry.retries = req.retries + 1
-            self.internal = retry
-            if self._gw.c.frontend.submit(retry):
-                return          # re-routed; stream continues seamlessly
-            if not retry._finish_fired and retry.finished_at is None:
-                # defensive: frontend always finishes on failure
-                retry.finish(error=req.error, code=req.error_code)
-            return              # retry's own on_finish finalized us
+                and self._emitted > 0
+                and len(req.output) >= req.sampling.max_tokens):
+            # the journal is already complete: the backend died between
+            # its last token and the finish bookkeeping — every token
+            # was delivered, so this is a success, not a failure
+            req.error, req.error_code = "", ""
+            req.state = RequestState.FINISHED
+            self._finalize(req)
+            return
+        if (req.error_code == CODE_ENGINE_FAILED and not req.cancelled
+                and self._retries_left > 0):
+            if self._emitted == 0:
+                # backend died before the stream produced anything:
+                # re-route transparently on a fresh internal request
+                self._retries_left -= 1
+                with self._gw._stats_lock:
+                    self._gw.stats.stream_retries += 1
+                retry = self._gw._make_internal(self.request, self)
+                retry.retries = req.retries + 1
+                self.internal = retry
+                if self._gw.c.frontend.submit(retry):
+                    return      # re-routed; stream continues seamlessly
+                if not retry._finish_fired and retry.finished_at is None:
+                    # defensive: frontend always finishes on failure
+                    retry.finish(error=req.error, code=req.error_code)
+                return          # retry's own on_finish finalized us
+            if self._gw.c.frontend.healthy_replicas(req.model):
+                # mid-stream migration: the emitted-token journal on the
+                # SAME internal request is authoritative.  The surviving
+                # engine re-admits it as prompt + output (through the
+                # prefix cache, suffix-only prefill on a shared prefix)
+                # with the remaining budget, and emits only *new* tokens
+                # — the handle's stream resumes with no duplicated,
+                # lost, or reordered tokens.  `reset_for_retry` floors
+                # `wfq_charged` at the served tokens so the new
+                # replica's WFQ clock bills only the remainder, and the
+                # tenant token bucket (charged once at admission) is
+                # never touched again.
+                self._retries_left -= 1
+                with self._gw._stats_lock:
+                    self._gw.stats.migrations += 1
+                src, err, code = req.node, req.error, req.error_code
+                n_resumed = len(req.output)
+                req.reset_for_retry()
+                if self._gw.c.frontend.submit(req):
+                    self._gw.c.bus.emit(
+                        REQUEST_MIGRATED, request_id=req.request_id,
+                        tenant=req.tenant, model=req.model,
+                        from_node=src, to_node=req.node,
+                        tokens_resumed=n_resumed)
+                    return      # resumed; stream continues seamlessly
+                if not req._finish_fired and req.finished_at is None:
+                    # defensive: frontend always finishes on failure
+                    req.finish(error=err, code=code)
+                return          # the failure finish re-entered _on_finish
+                                # and finalized us
         self._finalize(req)
 
     def _finalize(self, req: Request):

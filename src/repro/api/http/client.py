@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import http.client
 import json
+import random
 import sys
 import time
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Union
@@ -35,12 +36,15 @@ from repro.api.http.chat import ChatMessage
 class HTTPClientError(RuntimeError):
     """A non-2xx wire response, mapped back onto the error taxonomy."""
 
-    def __init__(self, status: int, body: Dict[str, Any]):
+    def __init__(self, status: int, body: Dict[str, Any],
+                 retry_after: Optional[float] = None):
         err = body.get("error", {}) if isinstance(body, dict) else {}
         self.status = status
         self.message = err.get("message", f"HTTP {status}")
         self.type = err.get("type", "")
         self.retryable = bool(err.get("retryable", False))
+        # the server's Retry-After header (seconds), when it sent one
+        self.retry_after = retry_after
         try:
             self.code: Optional[ErrorCode] = ErrorCode(self.type)
         except ValueError:
@@ -75,10 +79,19 @@ class _CountingSocket:
         return getattr(self._sock, name)
 
 
+# structured rejections that are safe AND useful to retry: the server
+# definitively answered (nothing is in flight), and the condition is
+# transient — overload, rate limit, or a routing gap during failover
+_RETRYABLE_CODES = (ErrorCode.OVERLOADED, ErrorCode.RATE_LIMITED,
+                    ErrorCode.NO_BACKEND)
+
+
 class HTTPClient:
     def __init__(self, base_url: str = "http://127.0.0.1:8000", *,
                  tenant: str = "", timeout_s: float = 130.0,
-                 keepalive_guard_s: float = 4.0):
+                 keepalive_guard_s: float = 4.0, retries: int = 0,
+                 backoff_base_s: float = 0.05, backoff_cap_s: float = 2.0,
+                 backoff_seed: Optional[int] = None):
         u = urlparse(base_url)
         if u.scheme not in ("http", ""):
             raise ValueError(f"unsupported scheme {u.scheme!r}")
@@ -91,6 +104,18 @@ class HTTPClient:
         # default) so generation POSTs never race the server's idle
         # close (a retry there could double-submit)
         self.keepalive_guard_s = keepalive_guard_s
+        # automatic backoff-retry budget for *structured* retryable
+        # rejections (429/503 with OVERLOADED / RATE_LIMITED /
+        # NO_BACKEND).  Default OFF: retrying is a policy decision.
+        # Distinct from the transport-level resend in `_request`, which
+        # only fires when zero request bytes could have reached the
+        # server (the `_CountingSocket` witness) — these retries fire
+        # only after the server definitively *answered*, so they can
+        # never double-submit a generation
+        self.retries = max(0, retries)
+        self.backoff_base_s = backoff_base_s
+        self.backoff_cap_s = backoff_cap_s
+        self._rng = random.Random(backoff_seed)
         self._conn: Optional[http.client.HTTPConnection] = None
         self._last_used = 0.0
         # set by streaming calls from the X-Request-Id response header,
@@ -122,6 +147,29 @@ class HTTPClient:
 
     def _request(self, method: str, path: str,
                  body: Optional[Dict] = None) -> http.client.HTTPResponse:
+        """One logical request with the optional structured-rejection
+        retry budget (exponential backoff, full jitter, honors the
+        server's Retry-After)."""
+        attempt = 0
+        while True:
+            try:
+                return self._request_once(method, path, body)
+            except HTTPClientError as e:
+                if attempt >= self.retries \
+                        or e.code not in _RETRYABLE_CODES:
+                    raise
+                delay = min(self.backoff_base_s * (2 ** attempt),
+                            self.backoff_cap_s)
+                delay *= self._rng.random()          # full jitter
+                if e.retry_after is not None:
+                    delay = max(delay, min(e.retry_after,
+                                           self.backoff_cap_s))
+                time.sleep(delay)
+                attempt += 1
+
+    def _request_once(self, method: str, path: str,
+                      body: Optional[Dict] = None
+                      ) -> http.client.HTTPResponse:
         headers = {"Accept": "application/json"}
         if self.tenant:
             headers["Authorization"] = f"Bearer {self.tenant}"
@@ -182,7 +230,13 @@ class HTTPClient:
             except ValueError:
                 parsed = {"error": {"message": raw.decode("utf-8",
                                                           "replace")}}
-            raise HTTPClientError(resp.status, parsed)
+            after = resp.headers.get("Retry-After")
+            try:
+                retry_after = float(after) if after is not None else None
+            except ValueError:
+                retry_after = None
+            raise HTTPClientError(resp.status, parsed,
+                                  retry_after=retry_after)
         return resp
 
     def _json(self, method: str, path: str,
@@ -369,6 +423,8 @@ def _main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--url", default="http://127.0.0.1:8000")
     p.add_argument("--tenant", default="",
                    help="sent as Authorization: Bearer <tenant>")
+    p.add_argument("--retries", type=int, default=0,
+                   help="backoff-retry budget for 429/503 rejections")
     sub = p.add_subparsers(dest="cmd", required=True)
     sub.add_parser("health")
     sub.add_parser("models")
@@ -399,7 +455,8 @@ def _main(argv: Optional[List[str]] = None) -> int:
     cn.add_argument("request_id", type=int)
 
     args = p.parse_args(argv)
-    client = HTTPClient(args.url, tenant=args.tenant)
+    client = HTTPClient(args.url, tenant=args.tenant,
+                        retries=args.retries)
     try:
         if args.cmd == "health":
             print(json.dumps(client.healthz(), indent=2))

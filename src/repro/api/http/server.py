@@ -57,6 +57,10 @@ class HTTPConfig:
     keepalive_idle_s: float = 5.0    # idle keep-alive connection timeout
     default_timeout_s: float = 120.0  # per-request generation deadline
     drain_timeout_s: float = 10.0    # stop(): in-flight request budget
+    # advisory Retry-After (seconds) attached to every 429/503 response
+    # so well-behaved clients back off instead of hammering an
+    # overloaded/draining service; <= 0 disables the header
+    retry_after_s: float = 1.0
 
 
 class _PooledHTTPServer(HTTPServer):
@@ -165,17 +169,31 @@ class _Handler(BaseHTTPRequestHandler):
         elif length > 0:
             self.rfile.read(length)
 
-    def _send_json(self, status: int, obj: Dict[str, Any]):
+    def _send_json(self, status: int, obj: Dict[str, Any],
+                   headers: Optional[Dict[str, str]] = None):
         data = json.dumps(obj).encode("utf-8")
         self.send_response(status)
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(data)))
+        if headers:
+            for k, v in headers.items():
+                self.send_header(k, v)
         self.end_headers()
         self.wfile.write(data)
 
+    def _retry_headers(self, status: int) -> Optional[Dict[str, str]]:
+        """Retry-After on 429/503: the rejection is transient (rate
+        limit, overload, drain) — tell the client when to come back.
+        Header-only; the error body shape stays pinned."""
+        after = self.svc.cfg.retry_after_s
+        if status in (429, 503) and after > 0:
+            return {"Retry-After": str(int(max(1, round(after))))}
+        return None
+
     def _send_error_body(self, err: APIError):
-        self._send_json(schemas.status_for(err.code),
-                        schemas.error_body(err))
+        status = schemas.status_for(err.code)
+        self._send_json(status, schemas.error_body(err),
+                        headers=self._retry_headers(status))
 
     # ---- SSE / chunked ------------------------------------------- #
     def _begin_sse(self, rid: int):
@@ -210,12 +228,14 @@ class _Handler(BaseHTTPRequestHandler):
         if not svc._enter():
             self.close_connection = True    # also skips body drain
             self._send_json(503, schemas.error_body(APIError(
-                ErrorCode.DRAINING, "server is shutting down")))
+                ErrorCode.DRAINING, "server is shutting down")),
+                headers=self._retry_headers(503))
             return
         try:
             self._dispatch(method, self.path.split("?", 1)[0])
         except WireError as e:
-            self._send_json(e.status, e.body())
+            self._send_json(e.status, e.body(),
+                            headers=self._retry_headers(e.status))
         except (BrokenPipeError, ConnectionResetError, socket.timeout):
             self.close_connection = True    # client went away mid-write
         except Exception as e:              # never leak a stack trace

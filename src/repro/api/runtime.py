@@ -27,6 +27,7 @@ import time
 from typing import TYPE_CHECKING, Dict, List, Optional
 
 from repro.core.controller import ModelLoad
+from repro.core.events import NODE_SUSPECTED, WATCHDOG_FIRED
 
 if TYPE_CHECKING:                      # avoid import cycle at runtime
     from repro.api.gateway import Gateway
@@ -37,6 +38,11 @@ class RuntimeConfig:
     tick_interval_s: float = 0.05      # controller load/health cadence
     pump_idle_wait_s: float = 0.02     # cv wait backstop per pump loop
     drain_timeout_s: float = 30.0      # stop(drain=True) upper bound
+    # pump watchdog: a single node.pump() call exceeding this wall-clock
+    # deadline marks the node SUSPECT in the HealthMonitor, so weighted
+    # routing demotes a hung/straggling engine before it stalls queued
+    # work.  The mark clears as soon as the step completes.  <= 0 off.
+    watchdog_step_timeout_s: float = 10.0
 
 
 @dataclasses.dataclass
@@ -44,6 +50,7 @@ class RuntimeStats:
     ticks: int = 0
     pump_wakeups: int = 0
     tokens_pumped: int = 0
+    watchdog_fired: int = 0
 
 
 class _NodePump(threading.Thread):
@@ -53,6 +60,9 @@ class _NodePump(threading.Thread):
         super().__init__(name=f"pump-{node.node_id}", daemon=True)
         self.rt = runtime
         self.node = node
+        # monotonic timestamp of the pump() call in flight (None when
+        # idle); the tick loop's watchdog reads it cross-thread
+        self.busy_since: Optional[float] = None
 
     def run(self):
         node, rt = self.node, self.rt
@@ -72,7 +82,11 @@ class _NodePump(threading.Thread):
                 # dead nodes idle until recover(); stop() still joins us
                 time.sleep(rt.cfg.pump_idle_wait_s)
                 continue
-            emitted = node.pump()
+            self.busy_since = time.monotonic()
+            try:
+                emitted = node.pump()
+            finally:
+                self.busy_since = None
             with rt._stats_lock:       # N pump threads share these
                 rt.stats.pump_wakeups += 1
                 rt.stats.tokens_pumped += emitted
@@ -111,6 +125,7 @@ class ServingRuntime:
         self._drain = True
         self._drain_deadline = 0.0
         self._running = False
+        self._suspected: set = set()   # nodes the watchdog has demoted
 
     # ------------------------------------------------------------- #
     @property
@@ -207,10 +222,40 @@ class ServingRuntime:
                 page_pressure=page_pressure)
         return out
 
+    def _watchdog(self):
+        """Demote nodes whose pump step blew its wall-clock deadline: a
+        hung engine (driver stall, pathological compile, chaos-injected
+        hang) would otherwise block its pump thread forever while the
+        node keeps heartbeating HEALTHY.  The SUSPECT mark adds the
+        frontend's `suspect_penalty` to every replica on the node, so
+        new work routes around it; the mark clears when the step
+        finally completes."""
+        deadline = self.cfg.watchdog_step_timeout_s
+        if deadline <= 0:
+            return
+        mon = self.gateway.c.monitor
+        bus = self.gateway.c.bus
+        now = time.monotonic()
+        for node_id, pump in list(self._pumps.items()):
+            since = pump.busy_since
+            stalled = since is not None and (now - since) > deadline
+            if stalled and node_id not in self._suspected:
+                self._suspected.add(node_id)
+                mon.mark_suspect(node_id)
+                with self._stats_lock:
+                    self.stats.watchdog_fired += 1
+                bus.emit(WATCHDOG_FIRED, node=node_id,
+                         stalled_s=now - since)
+                bus.emit(NODE_SUSPECTED, node=node_id, reason="watchdog")
+            elif not stalled and node_id in self._suspected:
+                self._suspected.discard(node_id)
+                mon.clear_suspect(node_id)
+
     def tick_once(self):
         """One controller iteration with fresh load feedback.  New nodes
         (elastic joins / autoscale targets) get pump threads here."""
         self.stats.ticks += 1
+        self._watchdog()
         self.gateway.c.tick(load=self.load_report())
         if not self._stopping.is_set():
             for node in list(self.gateway.c.fleet.nodes.values()):

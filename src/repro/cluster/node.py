@@ -100,6 +100,10 @@ class BackendNode:
         self._alive = True
         self._seed = seed
         self.last_heartbeat = time.monotonic()
+        # chaos harness hook (repro.cluster.faults.FaultInjector); None
+        # in production.  Consulted at the pump/submit/heartbeat
+        # boundaries so faults land at exact, reproducible step counts.
+        self.faults = None
         # `lock` guards node structure (the instances map, alive flag);
         # engine mutation is serialized per-instance on `Instance.lock`
         # (always acquired *after* the node lock, never before — no
@@ -154,6 +158,12 @@ class BackendNode:
 
     def heartbeat(self) -> Optional[Dict]:
         if not self._alive:
+            return None
+        if self.faults is not None \
+                and self.faults.heartbeat_muted(self.node_id):
+            # silent heartbeat loss: the process is up and serving, but
+            # the control plane hears nothing — the zombie case the
+            # controller must fence before re-routing
             return None
         self.last_heartbeat = time.monotonic()
         return {
@@ -224,6 +234,13 @@ class BackendNode:
         nodes.  Wakes this node's pump thread on success."""
         if not self._alive:
             req.finish(error=f"node {self.node_id} down",
+                       code=CODE_ENGINE_FAILED)
+            return False
+        if self.faults is not None \
+                and self.faults.submit_blocked(self.node_id):
+            # transient submit flap (dropped RPC): refuse without dying,
+            # the frontend's retry loop fails over to the next replica
+            req.finish(error=f"node {self.node_id} dropped the submit",
                        code=CODE_ENGINE_FAILED)
             return False
         inst = self.instances.get(instance_id)
@@ -316,6 +333,13 @@ class BackendNode:
         from idling."""
         if not self._alive:
             return 0
+        if self.faults is not None:
+            # the chaos clock ticks at pump boundaries: due faults fire
+            # here (crash, hang, slow, window transitions) so every
+            # injected failure lands at an exact, reproducible step
+            self.faults.on_step(self)
+            if not self._alive:        # the due fault crashed this node
+                return 0
         with self.lock:
             insts = [i for i in self.instances.values()
                      if i.engine is not None and i.engine.alive]

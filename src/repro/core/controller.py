@@ -326,6 +326,14 @@ class SDAIController:
     def _handle_node_death(self, nid: str):
         self._dead_nodes.add(nid)
         self.monitor.mark_dead(nid)
+        # fence a zombie: a node whose heartbeats went silent but whose
+        # process is still up must not keep serving while routing has
+        # written it off (split-brain).  fail() finishes every in-flight
+        # request with ENGINE_FAILED, which drives the gateway's
+        # pre-token re-route / mid-stream migration onto survivors.
+        node = self.fleet.nodes.get(nid)
+        if node is not None and node.alive:
+            node.fail()
         lost = self.replicas.on_node(nid)
         for info in lost:
             self.replicas.remove(info.key)

@@ -4,7 +4,19 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List
+from typing import Any, Callable, Dict, List, Sequence
+
+# Failure/recovery event kinds.  Emitters elsewhere pass ad-hoc strings
+# for routine orchestration actions; the fault-tolerance kinds are named
+# here because the admin snapshot (`FleetSnapshot.failure_events`) and
+# the chaos harness both count them by exact name.
+REQUEST_MIGRATED = "request_migrated"   # mid-stream resume on a new replica
+NODE_SUSPECTED = "node_suspected"       # demoted in weighted routing
+WATCHDOG_FIRED = "watchdog_fired"       # a pump step blew its deadline
+FAULT_INJECTED = "fault_injected"       # chaos harness applied a fault
+
+FAILURE_EVENT_KINDS = (REQUEST_MIGRATED, NODE_SUSPECTED, WATCHDOG_FIRED,
+                       FAULT_INJECTED)
 
 
 @dataclasses.dataclass
@@ -34,3 +46,12 @@ class EventBus:
 
     def of_kind(self, kind: str) -> List[Event]:
         return [e for e in self.events if e.kind == kind]
+
+    def counts(self, kinds: Sequence[str]) -> Dict[str, int]:
+        """Occurrence count per kind over the retained window (the admin
+        snapshot's failure-event summary)."""
+        out = {k: 0 for k in kinds}
+        for e in self.events:
+            if e.kind in out:
+                out[e.kind] += 1
+        return out

@@ -40,6 +40,10 @@ class HealthMonitor:
         self.last_seen: Dict[str, float] = {}
         self.latency_ewma: Dict[str, float] = {}
         self.dead_marks: set = set()
+        # watchdog/operator demotions: the node still heartbeats, but a
+        # pump step blew its deadline — weighted routing penalizes it
+        # until the stall clears
+        self.suspect_marks: set = set()
 
     def observe_heartbeat(self, node_id: str,
                           ts: Optional[float] = None):
@@ -56,6 +60,12 @@ class HealthMonitor:
     def clear_mark(self, node_id: str):
         self.dead_marks.discard(node_id)
 
+    def mark_suspect(self, node_id: str):
+        self.suspect_marks.add(node_id)
+
+    def clear_suspect(self, node_id: str):
+        self.suspect_marks.discard(node_id)
+
     def status(self, node_id: str) -> NodeHealth:
         """Routing-facing status: marks are authoritative; ages demote."""
         if node_id in self.dead_marks:
@@ -63,6 +73,8 @@ class HealthMonitor:
         seen = self.last_seen.get(node_id)
         if seen is None:
             return NodeHealth.DEAD
+        if node_id in self.suspect_marks:
+            return NodeHealth.SUSPECT
         if self.clock() - seen > self.cfg.suspect_after:
             return NodeHealth.SUSPECT
         return NodeHealth.HEALTHY
@@ -75,6 +87,7 @@ class HealthMonitor:
     def forget(self, node_id: str):
         self.last_seen.pop(node_id, None)
         self.dead_marks.discard(node_id)
+        self.suspect_marks.discard(node_id)
 
     def is_straggler(self, replica_key: str) -> bool:
         lat = self.latency_ewma.get(replica_key)

@@ -56,18 +56,29 @@ class HostPagePool:
         self._store: Dict[int, Dict] = {}
         self.swapped_out = 0          # pages landed host-side
         self.swapped_in = 0           # pages restored to device
+        # chaos hook: a swap-tier outage (host OOM, pinned-memory
+        # failure).  While set, new swap-outs are refused — the engine
+        # falls back to recompute-preemption — but pages already parked
+        # stay readable, so swapped requests still resume.
+        self.fail_puts = False
 
     @property
     def in_use(self) -> int:
         return self.n_pages - len(self.free_ids)
 
     def can_hold(self, n: int) -> bool:
+        if self.fail_puts:
+            return False
         return n <= len(self.free_ids)
 
-    def put(self, blocks: Dict, n: int) -> Optional[List[int]]:
+    def put(self, blocks: Dict, n: int,
+            force: bool = False) -> Optional[List[int]]:
         """Store `n` pages from stacked host blocks
-        `{leaf: (layers, n, page_size, ...)}`.  All-or-nothing."""
-        if n > len(self.free_ids):
+        `{leaf: (layers, n, page_size, ...)}`.  All-or-nothing.
+        `force` bypasses the chaos `fail_puts` hook — used when
+        re-parking blocks whose host copies were already released, where
+        refusing would lose data instead of degrading service."""
+        if (self.fail_puts and not force) or n > len(self.free_ids):
             return None
         ids = [self.free_ids.pop() for _ in range(n)]
         for i, hid in enumerate(ids):
@@ -176,7 +187,7 @@ def swap_in_slot(pool: PagedKVPool, host: HostPagePool, paged: Dict,
         # host copies are gone; re-park the restored blocks
         if handle.host:
             blocks = take_pages(new_paged, fresh)
-            hids = host.put(blocks, len(fresh))
+            hids = host.put(blocks, len(fresh), force=True)
             handle.host = [(i, h) for (i, _), h
                            in zip(handle.host, hids)]
         return None

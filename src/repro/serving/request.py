@@ -124,13 +124,19 @@ class Request:
             self.on_finish(self)
 
     def reset_for_retry(self):
-        """Frontend failover: clear a failed attempt so the request can be
-        resubmitted to the next-best replica."""
+        """Failover/migration reset: clear a failed attempt so the request
+        can be resubmitted to the next-best replica.  The emitted-token
+        journal (`output`) is authoritative and survives untouched — a
+        mid-stream migration resumes from `prompt + output` with the
+        remaining budget, never replaying or dropping tokens."""
         self.retries += 1
         self.state = RequestState.QUEUED
         self.error = ""
         self.error_code = ""
         self.finished_at = None
         self._finish_fired = False
-        # the next replica runs its own WFQ clock: its charge starts over
-        self.wfq_charged = 0.0
+        # exactly-once billing across replicas: floor the WFQ debit at
+        # the tokens already served, so the next replica's clock bills
+        # only the remaining budget (zero served => starts over, the old
+        # pre-token failover behaviour)
+        self.wfq_charged = float(len(self.output))

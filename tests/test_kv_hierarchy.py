@@ -282,3 +282,43 @@ def test_admin_snapshot_cache_section_and_flush(cfg, param_store):
     assert inst.engine.pool.pages_in_use == 0
     assert gw.admin.snapshot().nodes[0].instances[0].cache_device_pages \
         == 0
+
+
+# ------------------- crash mid-swap-out ------------------------------ #
+def test_node_death_mid_swap_out_keeps_journal_and_resumes(cfg, params):
+    """The engine dies while preempted requests are parked on the host
+    swap tier: every in-flight request fails with its emitted-token
+    journal intact, resumes on a peer token-identically (the migration
+    path), bills only its remaining budget there, and the peer drains
+    with zero device or host pages held."""
+    ref = _run(_engine(cfg, params, n_slots=6, page_size=8,
+                       decode_block=4), _work())
+    eng = _engine(cfg, params, n_slots=6, page_size=8, kv_pages=18,
+                  decode_block=4, host_kv_pages=64)
+    reqs = _work()
+    for r in reqs:
+        assert eng.submit(r)
+    guard = 0
+    while eng.swap_outs == 0 and (eng.slot_req or eng.scheduler.depth):
+        eng.step()
+        guard += 1
+        assert guard < 500
+    assert eng.swap_outs >= 1               # work is parked on the host
+    eng.fail()                              # ... and the node dies
+    failed = [r for r in reqs if r.error]
+    assert failed, "the crash caught nothing in flight"
+    journals = {r.request_id: list(r.output) for r in failed}
+    peer = _engine(cfg, params, n_slots=6, page_size=8, decode_block=4,
+                   host_kv_pages=64)
+    for r in failed:
+        r.reset_for_retry()
+        # journal floor: the peer's WFQ clock bills only the remainder
+        assert r.wfq_charged == float(len(r.output))
+        assert peer.submit(r)
+    peer.run_until_done()
+    assert [tuple(r.output) for r in reqs] == ref
+    for r in failed:                        # journal prefix untouched
+        done = journals[r.request_id]
+        assert list(r.output[:len(done)]) == done
+    assert peer.pool.pages_in_use == 0 and peer.pool.n_active == 0
+    assert peer.host_pool.in_use == 0

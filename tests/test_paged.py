@@ -283,10 +283,16 @@ def test_preempted_resume_charges_wfq_exactly_once():
     sched.requeue(req)
     sched.next_prefill_bucket(1, lambda n: 8)
     assert sched._vtime["t"] == pytest.approx(v1)
-    # frontend failover moves the request to a fresh replica whose WFQ
-    # clock never saw it: the charge must start over there
+    # failover/migration moves the request to a fresh replica whose WFQ
+    # clock never saw it: the charge floors at the tokens already served,
+    # so the new replica bills only the remaining budget — exactly-once
+    # across the cluster, and zero served still starts the charge over
     req.reset_for_retry()
-    assert req.wfq_charged == 0.0
+    assert req.wfq_charged == float(len(req.output)) == 7.0
+    fresh = Request(model="m", prompt=[1], tenant="t",
+                    sampling=SamplingParams(max_tokens=10))
+    fresh.reset_for_retry()
+    assert fresh.wfq_charged == 0.0
 
 
 def test_page_budget_gates_admission():
@@ -456,3 +462,87 @@ def test_multi_instance_node_pumps_through_executor(cfg, param_store):
         solo.pump()
     assert solo._executor is None
     assert len(r.output) == 4
+
+
+# ------------------- crash-timing matrix ---------------------------- #
+def _two_node_stack(param_store, cfg, n_slots=2, max_len=48):
+    """Cross-node replicas so a victim always has a survivor."""
+    fleet = Fleet([BackendNode(f"n{i}", "v5e-1", param_store=param_store)
+                   for i in range(2)])
+    catalog = ModelCatalog()
+    catalog.register(cfg)
+    ctrl = SDAIController(fleet, catalog)
+    ctrl.discover()
+    for node in fleet.nodes.values():
+        inst = node.deploy(cfg, n_slots=n_slots, max_len=max_len)
+        ctrl.replicas.add(ReplicaInfo(
+            ReplicaKey(node.node_id, inst.instance_id),
+            cfg.name, "", n_slots, max_len, inst.bytes))
+    return fleet, ctrl, Gateway(ctrl)
+
+
+def _survivor_engines(fleet):
+    return [inst.engine for node in fleet.nodes.values() if node.alive
+            for inst in node.instances.values()
+            if inst.engine is not None]
+
+
+def test_node_death_during_prefill_reroutes_without_leak(cfg,
+                                                         param_store):
+    """The victim dies while the request is still queued for prefill:
+    the pre-token re-route lands it on the survivor, which bills the
+    full budget exactly once and drains to zero pages."""
+    fleet, ctrl, gw = _two_node_stack(param_store, cfg)
+    n = 8
+    h = gw.submit(cfg.name, [1, 2, 3], SamplingParams(max_tokens=n),
+                  tenant="matrix")
+    victim = h.internal.node
+    assert not h.internal.output            # no token out yet
+    fleet.fail_node(victim)                 # dies before first token
+    resp = h.result(timeout_s=120)
+    assert resp.ok, resp.error
+    assert resp.node != victim and resp.retries >= 1
+    assert len(resp.tokens) == n
+    assert gw.stats.stream_retries >= 1 and gw.stats.migrations == 0
+    # exactly-once billing: the full budget, charged by the survivor
+    assert h.internal.wfq_charged == float(n)
+    for eng in _survivor_engines(fleet):
+        assert eng.pool.pages_in_use == 0 and eng.pool.n_active == 0
+
+
+def test_node_death_mid_decode_block_migrates_cleanly(cfg, param_store):
+    """The victim dies with tokens already emitted: the journal resumes
+    on the survivor token-identically, the survivor's WFQ clock advances
+    only by the remaining budget (no double billing), and no pages
+    leak."""
+    fleet, ctrl, gw = _two_node_stack(param_store, cfg)
+    n = 12
+    ref = gw.generate(cfg.name, [5, 3, 1], SamplingParams(max_tokens=n),
+                      timeout_s=120)
+    assert ref.ok
+    h = gw.submit(cfg.name, [5, 3, 1], SamplingParams(max_tokens=n),
+                  tenant="matrix")
+    victim = h.internal.node
+    guard = 0
+    while not h.internal.output:            # run into mid-decode
+        gw._pump()
+        guard += 1
+        assert guard < 200
+    fleet.fail_node(victim)
+    resp = h.result(timeout_s=120)
+    assert resp.ok, resp.error
+    assert resp.node != victim
+    assert list(resp.tokens) == list(ref.tokens)
+    assert gw.stats.migrations >= 1
+    assert h.internal.wfq_charged == float(n)
+    # the survivor billed only the remaining budget: its tenant clock
+    # sits at budget - journal, not at the full budget again
+    resumed = ctrl.bus.of_kind("request_migrated")[-1]
+    survivor = fleet.nodes[resp.node]
+    vtimes = [inst.engine.scheduler._vtime.get("matrix", 0.0)
+              for inst in survivor.instances.values()
+              if inst.engine is not None]
+    assert max(vtimes) == pytest.approx(
+        n - resumed.data["tokens_resumed"])
+    for eng in _survivor_engines(fleet):
+        assert eng.pool.pages_in_use == 0 and eng.pool.n_active == 0
