@@ -12,7 +12,7 @@ from repro.configs import ARCHS
 from repro.training import compression as comp_lib
 from repro.training.data import DataConfig
 from repro.training.optimizer import AdamWConfig
-from repro.training.train_loop import Trainer, TrainConfig
+from repro.training.train_loop import TrainConfig, Trainer
 
 
 def run(steps: int = 20):

@@ -6,7 +6,7 @@ from __future__ import annotations
 import statistics
 
 from repro.api import Gateway
-from repro.cluster import Fleet, BackendNode
+from repro.cluster import BackendNode, Fleet
 from repro.configs import ZOO
 from repro.core import (ModelCatalog, ReplicaInfo, ReplicaKey,
                         SDAIController)

@@ -19,8 +19,15 @@ loses and duplicates **zero** tokens across a mid-decode node kill, so
 migration must have happened.  Recovery latency is wall-clock and stays
 informational.
 
+The ``placement`` section (written by ``bench_placement``) gates on both
+kinds: cost-optimal placement must beat VRAM-only by an absolute margin
+(>= 15% lower modeled cost-per-token on the heterogeneous fleet100
+study, at equal placed demand), and the advantage must not shrink more
+than the budget below the checked-in baseline.  Modeled cost-per-token
+is deterministic (no wall-clock), so it gates reliably.
+
 Usage:  python benchmarks/check_regression.py \
-            [--only availability] \
+            [--only availability|placement] \
             [BENCH_serving.json] [benchmarks/baseline_serving.json]
 """
 from __future__ import annotations
@@ -31,6 +38,7 @@ from pathlib import Path
 
 GATED_METRICS = ("dispatches_per_token", "host_syncs_per_token")
 BUDGET = 0.20                 # allowed relative regression
+COST_ADVANTAGE_FLOOR = 0.15   # cost-optimal must beat VRAM-only by 15%
 
 
 def _check_availability(current, failures):
@@ -58,6 +66,58 @@ def _check_availability(current, failures):
     return True
 
 
+def _check_placement(current, baseline, failures):
+    """Heterogeneous cost-study gates (when the section is present).
+
+    Absolute: fleet100 cost_advantage >= COST_ADVANTAGE_FLOOR with both
+    solvers placing equal demand.  Relative: each study's advantage must
+    not drop more than BUDGET below the checked-in baseline."""
+    place = current.get("placement")
+    if place is None:
+        return False
+    base_place = (baseline or {}).get("placement", {})
+    fleet100 = place.get("fleet100", {})
+    adv = fleet100.get("cost_advantage", 0.0)
+    equal = fleet100.get("equal_demand", False)
+    status = "FAIL" if adv < COST_ADVANTAGE_FLOOR else "ok"
+    print(f"[{status}] placement.fleet100.cost_advantage: "
+          f"current={adv:.4f} "
+          f"(floor={COST_ADVANTAGE_FLOOR:.2f} absolute)")
+    if adv < COST_ADVANTAGE_FLOOR:
+        failures.append(
+            f"placement.fleet100.cost_advantage = {adv:.4f} "
+            f"(< {COST_ADVANTAGE_FLOOR:.2f}: cost-optimal no longer "
+            f"beats VRAM-only placement)")
+    status = "FAIL" if not equal else "ok"
+    print(f"[{status}] placement.fleet100.equal_demand: {equal} "
+          f"(placed_vram={fleet100.get('placed_vram')} "
+          f"placed_cost_optimal={fleet100.get('placed_cost_optimal')})")
+    if not equal:
+        failures.append(
+            "placement.fleet100.equal_demand is false — the solvers "
+            "placed different demand, cost comparison is meaningless")
+    for label in ("testbed6", "fleet100"):
+        b = base_place.get(label, {}).get("cost_advantage")
+        c = place.get(label, {}).get("cost_advantage")
+        if b is None or c is None:
+            continue
+        limit = b * (1 - BUDGET)
+        status = "FAIL" if c < limit else "ok"
+        print(f"[{status}] placement.{label}.cost_advantage vs baseline: "
+              f"current={c:.4f} baseline={b:.4f} (floor={limit:.4f})")
+        if c < limit:
+            failures.append(
+                f"placement.{label}.cost_advantage regressed "
+                f"{(1 - c / b) * 100:.1f}% (> {BUDGET * 100:.0f}%)")
+        cur = place.get(label, {})
+        print(f"[info] placement.{label}: "
+              f"cpt_vram={cur.get('cost_per_token_vram', 0):.4e} "
+              f"cpt_cost={cur.get('cost_per_token_cost_optimal', 0):.4e} "
+              f"util_vram={cur.get('utilization_vram', 0):.4f} "
+              f"util_cost={cur.get('utilization_cost_optimal', 0):.4f}")
+    return True
+
+
 def main(argv):
     args = list(argv[1:])
     only = None
@@ -75,6 +135,23 @@ def main(argv):
         if not _check_availability(current, failures):
             failures.append(
                 f"availability section missing from {current_path}")
+        if failures:
+            print("\nBench regression gate FAILED:")
+            for f in failures:
+                print(f"  - {f}")
+            return 1
+        print("\nBench regression gate passed.")
+        return 0
+
+    if only == "placement":              # placement-gate job
+        failures = []
+        try:
+            baseline = json.loads(baseline_path.read_text())
+        except (FileNotFoundError, ValueError):
+            baseline = {}
+        if not _check_placement(current, baseline, failures):
+            failures.append(
+                f"placement section missing from {current_path}")
         if failures:
             print("\nBench regression gate FAILED:")
             for f in failures:
@@ -179,6 +256,7 @@ def main(argv):
               f"{http.get('inproc_p95_ttft_ms', 0):.1f}")
 
     _check_availability(current, failures)   # gates when section present
+    _check_placement(current, baseline, failures)
 
     if failures:
         print("\nBench regression gate FAILED:")

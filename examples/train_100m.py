@@ -14,7 +14,7 @@ import argparse
 from repro.configs import ARCHS
 from repro.training.data import DataConfig
 from repro.training.optimizer import AdamWConfig
-from repro.training.train_loop import Trainer, TrainConfig
+from repro.training.train_loop import TrainConfig, Trainer
 
 
 def main():

@@ -86,6 +86,30 @@ class TenantSnapshot:
 
 
 @dataclasses.dataclass(frozen=True)
+class ClassSnapshot:
+    """Per-node-class rollup: fleet share, cost weight, modeled
+    cost-per-token per request-size bucket (averaged over deployed
+    models), and observed routed traffic per bucket — the heterogeneity
+    dashboard the paper's mixed-GPU story needs."""
+    klass: str
+    cost_per_hour: float
+    legacy: bool
+    nodes: int
+    alive_nodes: int
+    hbm_budget: int
+    hbm_used: int
+    replicas: int
+    routed_by_bucket: Dict[str, int] = \
+        dataclasses.field(default_factory=dict)
+    cost_per_token: Dict[str, float] = \
+        dataclasses.field(default_factory=dict)
+
+    @property
+    def utilization(self) -> float:
+        return self.hbm_used / self.hbm_budget if self.hbm_budget else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
 class FleetSnapshot:
     connected: int
     total: int
@@ -99,6 +123,8 @@ class FleetSnapshot:
     # migrations, watchdog trips, suspects, injected faults (kind -> n)
     failure_events: Dict[str, int] = \
         dataclasses.field(default_factory=dict)
+    # per-GPU-class demand/cost rollup (heterogeneity dashboard)
+    classes: Tuple[ClassSnapshot, ...] = ()
 
     def node(self, node_id: str) -> Optional[NodeSnapshot]:
         for n in self.nodes:
@@ -149,6 +175,18 @@ class FleetSnapshot:
                            "tokens_charged": t.tokens_charged,
                            "refunds": t.refunds}
                 for t in self.tenants},
+            "classes": {
+                k.klass: {"cost_per_hour": k.cost_per_hour,
+                          "legacy": k.legacy,
+                          "nodes": k.nodes,
+                          "alive_nodes": k.alive_nodes,
+                          "hbm_budget": k.hbm_budget,
+                          "hbm_used": k.hbm_used,
+                          "utilization": k.utilization,
+                          "replicas": k.replicas,
+                          "routed_by_bucket": dict(k.routed_by_bucket),
+                          "cost_per_token": dict(k.cost_per_token)}
+                for k in self.classes},
             "failures": dict(self.failure_events),
             "last_update": self.last_update,
         }
@@ -258,7 +296,51 @@ class AdminAPI:
             total=len(nodes), nodes=tuple(nodes), models=models,
             routing=routing, utilization=c.fleet_utilization(),
             last_update=c.clock(), tenants=tuple(tenants),
-            failure_events=c.bus.counts(FAILURE_EVENT_KINDS))
+            failure_events=c.bus.counts(FAILURE_EVENT_KINDS),
+            classes=self._class_rollup(nodes))
+
+    def _class_rollup(self,
+                      nodes: List[NodeSnapshot]) -> Tuple[ClassSnapshot,
+                                                          ...]:
+        """Aggregate node snapshots per NodeClass and annotate each class
+        with observed per-bucket routed traffic plus the perf model's
+        per-bucket cost-per-token (averaged over models the class could
+        serve — the controller's registered demands)."""
+        from repro.cluster.hardware import NODE_CLASSES
+        from repro.core.perfmodel import BUCKETS
+        c = self.c
+        by_class: Dict[str, List[NodeSnapshot]] = {}
+        for n in nodes:
+            by_class.setdefault(n.klass, []).append(n)
+        # observed traffic: bucket -> class -> routed count
+        traffic = c.frontend.stats.per_bucket_class
+        out = []
+        for kname in sorted(by_class):
+            klass = NODE_CLASSES.get(kname)
+            members = by_class[kname]
+            cfgs = [d.cfg for d in c.demands.values()]
+            cpt: Dict[str, float] = {}
+            if klass is not None and cfgs:
+                for b in BUCKETS:
+                    vals = [c.perf.cost_per_token(klass, cfg, b)
+                            for cfg in cfgs]
+                    finite = [v for v in vals if v != float("inf")]
+                    if finite:
+                        cpt[b.name] = sum(finite) / len(finite)
+            out.append(ClassSnapshot(
+                klass=kname,
+                cost_per_hour=klass.cost_per_hour if klass else 0.0,
+                legacy=klass.legacy if klass else False,
+                nodes=len(members),
+                alive_nodes=sum(1 for n in members if n.alive),
+                hbm_budget=sum(n.hbm_budget for n in members),
+                hbm_used=sum(n.hbm_used for n in members),
+                replicas=sum(len(n.instances) for n in members),
+                routed_by_bucket={b: kc[kname]
+                                  for b, kc in traffic.items()
+                                  if kname in kc},
+                cost_per_token=cpt))
+        return tuple(out)
 
     # ---- mutate -------------------------------------------------- #
     def flush_cache(self, model: Optional[str] = None) -> Dict[str, int]:

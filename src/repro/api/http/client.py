@@ -29,8 +29,8 @@ import time
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Union
 from urllib.parse import urlparse
 
-from repro.api.types import APIError, ErrorCode
 from repro.api.http.chat import ChatMessage
+from repro.api.types import APIError, ErrorCode
 
 
 class HTTPClientError(RuntimeError):
@@ -349,6 +349,11 @@ class HTTPClient:
     # ---- admin surface ------------------------------------------- #
     def admin_snapshot(self) -> Dict[str, Any]:
         return self._json("GET", "/v1/admin/snapshot")
+
+    def admin_classes(self) -> Dict[str, Any]:
+        """Per-GPU-class rollup (cost weights, per-bucket routed traffic
+        and modeled cost-per-token) from the fleet snapshot."""
+        return self.admin_snapshot().get("classes", {})
 
     def admin_deploy(self, model: str, *, min_replicas: int = 1,
                      max_replicas: int = 0, n_slots: int = 4,

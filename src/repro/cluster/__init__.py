@@ -1,7 +1,7 @@
-from repro.cluster.hardware import NodeClass, NODE_CLASSES, PAPER_TESTBED
-from repro.cluster.node import BackendNode, Instance, instance_bytes
-from repro.cluster.fleet import Fleet, paper_testbed, scale_fleet
 from repro.cluster.faults import FaultInjector, FaultSpec
+from repro.cluster.fleet import Fleet, paper_testbed, scale_fleet
+from repro.cluster.hardware import NODE_CLASSES, PAPER_TESTBED, NodeClass
+from repro.cluster.node import BackendNode, Instance, instance_bytes
 
 __all__ = ["NodeClass", "NODE_CLASSES", "PAPER_TESTBED", "BackendNode",
            "Instance", "instance_bytes", "Fleet", "paper_testbed",

@@ -9,7 +9,7 @@ from __future__ import annotations
 import random
 from typing import Callable, Dict, List, Optional
 
-from repro.cluster.hardware import PAPER_TESTBED, NODE_CLASSES
+from repro.cluster.hardware import PAPER_TESTBED
 from repro.cluster.node import BackendNode
 
 

@@ -31,6 +31,14 @@ class NodeClass:
     year: int
     toolkit: str                 # paper keeps CUDA/ROCm visible in the UI
     legacy: bool = False
+    # per-GPU-class performance/cost vector: memory bandwidth bounds the
+    # decode roofline (weights + KV stream every step); `cost_per_hour`
+    # is the class's relative cost weight — legacy cards are nearly free
+    # (sunk hardware, the paper's whole premise), datacenter slices are
+    # priced like cloud on-demand.  The perf model and the cost-optimal
+    # placement solver consume both.
+    hbm_bw: float = 819e9        # bytes/s per chip
+    cost_per_hour: float = 1.0   # relative cost units per node-hour
 
     @property
     def hbm_total(self) -> int:
@@ -40,19 +48,33 @@ class NodeClass:
     def flops_total(self) -> float:
         return self.chips * self.flops_per_chip
 
+    @property
+    def hbm_bw_total(self) -> float:
+        return self.chips * self.hbm_bw
+
+    @property
+    def cost_rate(self) -> float:
+        """Cost units per second for the whole node."""
+        return self.cost_per_hour / 3600.0
+
 
 NODE_CLASSES: Dict[str, NodeClass] = {c.name: c for c in [
     # legacy / constrained classes (the paper's regime)
     NodeClass("v2-legacy", 1, 6 * GB, 23e12, 70e9, 2019, "XLA-v2",
-              legacy=True),
+              legacy=True, hbm_bw=300e9, cost_per_hour=0.10),
     NodeClass("v2-legacy-2", 2, 6 * GB, 23e12, 70e9, 2019, "XLA-v2",
-              legacy=True),
-    NodeClass("v5lite-1", 1, 8 * GB, 98e12, 180e9, 2021, "XLA-v5"),
-    NodeClass("v5e-1", 1, 16 * GB, 197e12, 200e9, 2020, "XLA-v5"),
+              legacy=True, hbm_bw=300e9, cost_per_hour=0.18),
+    NodeClass("v5lite-1", 1, 8 * GB, 98e12, 180e9, 2021, "XLA-v5",
+              hbm_bw=400e9, cost_per_hour=0.35),
+    NodeClass("v5e-1", 1, 16 * GB, 197e12, 200e9, 2020, "XLA-v5",
+              hbm_bw=819e9, cost_per_hour=0.60),
     # datacenter classes for scale-out
-    NodeClass("v5e-4", 4, 16 * GB, 197e12, 200e9, 2023, "XLA-v5"),
-    NodeClass("v5e-8", 8, 16 * GB, 197e12, 200e9, 2023, "XLA-v5"),
-    NodeClass("v5p-8", 8, 95 * GB, 459e12, 600e9, 2023, "XLA-v5p"),
+    NodeClass("v5e-4", 4, 16 * GB, 197e12, 200e9, 2023, "XLA-v5",
+              hbm_bw=819e9, cost_per_hour=2.40),
+    NodeClass("v5e-8", 8, 16 * GB, 197e12, 200e9, 2023, "XLA-v5",
+              hbm_bw=819e9, cost_per_hour=4.80),
+    NodeClass("v5p-8", 8, 95 * GB, 459e12, 600e9, 2023, "XLA-v5p",
+              hbm_bw=2765e9, cost_per_hour=13.00),
 ]}
 
 # The paper's 6-node testbed (Table 2), adapted chip-for-GPU.

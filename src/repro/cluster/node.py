@@ -10,24 +10,20 @@ mirroring the paper's per-node HAProxy.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
-import jax
-
-from repro.cluster.hardware import (NodeClass, NODE_CLASSES,
-                                    RUNTIME_RESERVE_FRACTION)
-from repro.configs.base import ArchConfig, BYTES
-from repro.serving.engine import EngineFailure, InferenceEngine, EngineConfig
+from repro.cluster.hardware import (NODE_CLASSES, RUNTIME_RESERVE_FRACTION,
+                                    NodeClass)
+from repro.configs.base import ArchConfig
+from repro.serving.engine import EngineConfig, EngineFailure, InferenceEngine
 from repro.serving.request import CODE_ENGINE_FAILED, Request
 
 _inst_ids = itertools.count()
-
-
-import functools
 
 
 def kv_pool_bytes(cfg: ArchConfig, n_slots: int, max_len: int,

@@ -8,7 +8,6 @@ memory *without* materializing weights.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Tuple
 
 BYTES = {"bf16": 2, "f32": 4, "int8": 1, "int4": 0.5}

@@ -1,20 +1,20 @@
 """The paper's primary contribution: the Software-Defined AI (SDAI) control
 plane — controller, VRAM-aware placement, HAProxy-style frontend, health
 monitoring, configuration wizard, unified client."""
-from repro.core.controller import (SDAIController, ControllerConfig,
-                                   AutoscaleConfig, ModelLoad)
-from repro.core.placement import (ModelDemand, Assignment, PlacementPlan,
-                                  place, place_naive, reallocation_plan,
-                                  plan_utilization)
-from repro.core.frontend import (ServiceFrontend, FrontendConfig,
-                                 TenantLimiter, TenantQuota, TenantUsage)
-from repro.core.health import HealthMonitor, HealthConfig, NodeHealth
-from repro.core.registry import (ModelCatalog, NodeRegistry,
-                                 ReplicaRegistry, ReplicaKey, ReplicaInfo)
-from repro.core.wizard import (ConfigWizard, WizardConfig, WizardSelection,
-                               WizardModelChoice)
 from repro.core.client import Client
-from repro.core.events import EventBus, Event
+from repro.core.controller import (AutoscaleConfig, ControllerConfig,
+                                   ModelLoad, SDAIController)
+from repro.core.events import Event, EventBus
+from repro.core.frontend import (FrontendConfig, ServiceFrontend,
+                                 TenantLimiter, TenantQuota, TenantUsage)
+from repro.core.health import HealthConfig, HealthMonitor, NodeHealth
+from repro.core.placement import (Assignment, ModelDemand, PlacementPlan,
+                                  place, place_naive, plan_utilization,
+                                  reallocation_plan)
+from repro.core.registry import (ModelCatalog, NodeRegistry, ReplicaInfo,
+                                 ReplicaKey, ReplicaRegistry)
+from repro.core.wizard import (ConfigWizard, WizardConfig, WizardModelChoice,
+                               WizardSelection)
 
 __all__ = ["SDAIController", "ControllerConfig", "AutoscaleConfig",
            "ModelLoad", "ModelDemand",

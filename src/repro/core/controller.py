@@ -16,12 +16,13 @@ import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.cluster.fleet import Fleet
-from repro.cluster.node import BackendNode
 from repro.core.events import EventBus
-from repro.core.frontend import ServiceFrontend, FrontendConfig
-from repro.core.health import HealthMonitor, HealthConfig, NodeHealth
-from repro.core.placement import (ModelDemand, PlacementPlan, place,
-                                  reallocation_plan, plan_utilization)
+from repro.core.frontend import FrontendConfig, ServiceFrontend
+from repro.core.health import HealthConfig, HealthMonitor, NodeHealth
+from repro.core.perfmodel import PerfModel
+from repro.core.placement import (ModelDemand, NodeSpec, PlacementPlan,
+                                  place, place_cost_optimal,
+                                  plan_utilization, reallocation_plan)
 from repro.core.registry import (ModelCatalog, NodeRegistry, ReplicaInfo,
                                  ReplicaKey, ReplicaRegistry)
 
@@ -78,6 +79,11 @@ class ControllerConfig:
     fill_vram: bool = True
     autoscale: AutoscaleConfig = dataclasses.field(
         default_factory=AutoscaleConfig)
+    # "vram": classic class-blind bin packing (`place`); "cost":
+    # heterogeneity-aware cost-optimal solver (`place_cost_optimal`) —
+    # initial deploy and rebalance rank candidate nodes by modeled
+    # cost-per-token.  Scale-up/scale-down are always class-aware.
+    placement_policy: str = "vram"
 
 
 class SDAIController:
@@ -92,8 +98,10 @@ class SDAIController:
         self.replicas = ReplicaRegistry()
         self.monitor = HealthMonitor(self.cfg.health, clock=clock)
         self.bus = EventBus()
+        self.perf = PerfModel()
         self.frontend = ServiceFrontend(fleet, self.replicas, self.monitor,
-                                        self.cfg.frontend)
+                                        self.cfg.frontend, perf=self.perf,
+                                        catalog=catalog)
         self.demands: Dict[str, ModelDemand] = {}
         self._dead_nodes: set = set()
         # load-feedback autoscale state: model -> consecutive hot/idle
@@ -133,6 +141,15 @@ class SDAIController:
             out[nid] = (node.hbm_free, node.klass.legacy)
         return out
 
+    def _free_capacity_specs(self) -> Dict[str, NodeSpec]:
+        """Capability-aware view of `_free_capacity` for the cost-optimal
+        solver (free VRAM + the full NodeClass vector)."""
+        out = {}
+        for nid in self._free_capacity():
+            node = self.fleet.nodes[nid]
+            out[nid] = NodeSpec(node.hbm_free, node.klass)
+        return out
+
     def _execute(self, plan: PlacementPlan) -> List[ReplicaKey]:
         keys = []
         for a in plan.assignments:
@@ -169,7 +186,11 @@ class SDAIController:
                 self.catalog.register(d.cfg)
             self.demands[d.cfg.name] = d
         cap = self._free_capacity()
-        plan = place(cap, demands, fill=self.cfg.fill_vram)
+        if self.cfg.placement_policy == "cost":
+            plan = place_cost_optimal(self._free_capacity_specs(), demands,
+                                      self.perf, fill=self.cfg.fill_vram)
+        else:
+            plan = place(cap, demands, fill=self.cfg.fill_vram)
         self._execute(plan)
         self.bus.emit("deployment_complete",
                       assignments=len(plan.assignments),
@@ -254,8 +275,11 @@ class SDAIController:
 
     def scale_up(self, model: str) -> bool:
         """Place one additional replica of `model` into free VRAM (bounded
-        by the demand's replica cap).  Returns True when a replica was
-        actually deployed."""
+        by the demand's replica cap).  Class-aware: the delta replica goes
+        to the node whose class serves the model's bucket mix at the
+        lowest modeled cost-per-token — on a homogeneous fleet this
+        degenerates to `place()`'s anti-affinity/tightest-fit choice.
+        Returns True when a replica was actually deployed."""
         if model not in self.catalog:
             return False
         demand = self.demands.get(model)
@@ -265,7 +289,8 @@ class SDAIController:
         if have >= demand.replica_cap:
             return False
         delta = dataclasses.replace(demand, min_replicas=1, max_replicas=1)
-        plan = place(self._free_capacity(), [delta], fill=False)
+        plan = place_cost_optimal(self._free_capacity_specs(), [delta],
+                                  self.perf, fill=False)
         keys = self._execute(plan)
         if not keys:
             return False           # no node has room: pressure persists
@@ -286,16 +311,26 @@ class SDAIController:
     def scale_down(self, model: str) -> bool:
         """Retire one surplus replica of `model` back toward the
         demand's `min_replicas` floor, freeing its VRAM.  Only a replica
-        with no queued or in-flight work is eligible (most recently
-        placed first, unwinding autoscale growth); when every surplus
-        replica is busy nothing is retired.  Returns True when a replica
-        was actually removed."""
+        with no queued or in-flight work is eligible; the most expensive
+        node class retires first, most recently placed breaking ties — on a homogeneous fleet this unwinds
+        autoscale growth exactly as before.  When every surplus replica
+        is busy nothing is retired.  Returns True when a replica was
+        actually removed."""
         demand = self.demands.get(model)
         floor = max(demand.min_replicas, 1) if demand is not None else 1
         infos = self.replicas.for_model(model)
         if len(infos) <= floor:
             return False
-        for info in reversed(infos):
+
+        def retire_cost(pair):
+            idx, info = pair
+            node = self.fleet.nodes.get(info.key.node_id)
+            rate = node.klass.cost_rate if node is not None else 0.0
+            return (-rate, -idx)
+
+        ordered = [info for _, info
+                   in sorted(enumerate(infos), key=retire_cost)]
+        for info in ordered:
             node = self.fleet.nodes.get(info.key.node_id)
             if node is None or not node.alive:
                 continue
@@ -361,10 +396,15 @@ class SDAIController:
         if not self.demands or not self.cfg.fill_vram:
             return
         node = self.fleet.nodes[nid]
-        cap = {nid: (node.hbm_free, node.klass.legacy)}
         fill = [dataclasses.replace(d, min_replicas=0)
                 for d in self.demands.values()]
-        plan = place(cap, fill, fill=True)
+        if self.cfg.placement_policy == "cost":
+            plan = place_cost_optimal(
+                {nid: NodeSpec(node.hbm_free, node.klass)}, fill,
+                self.perf, fill=True)
+        else:
+            plan = place({nid: (node.hbm_free, node.klass.legacy)}, fill,
+                         fill=True)
         self._execute(plan)
 
     def remove_replicas(self, model: str, keep: int = 0) -> int:

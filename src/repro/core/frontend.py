@@ -20,7 +20,10 @@ import time
 from typing import Callable, Dict, List, Optional
 
 from repro.cluster.fleet import Fleet
+from repro.configs import ZOO
+from repro.configs.base import ArchConfig
 from repro.core.health import HealthMonitor, NodeHealth
+from repro.core.perfmodel import PerfModel, SizeBucket, bucket_for
 from repro.core.registry import ReplicaKey, ReplicaRegistry
 from repro.serving.request import (CODE_ENGINE_FAILED, CODE_NO_BACKEND,
                                    Request)
@@ -31,6 +34,10 @@ class FrontendConfig:
     max_retries: int = 3
     straggler_penalty: float = 10.0     # virtual connections added to
     suspect_penalty: float = 10.0       # stragglers / suspect nodes
+    # size-bucket routing: virtual connections added per unit of
+    # class-mismatch (perf-model routing score - 1).  0 disables the
+    # heterogeneity-aware term and recovers pure least-connections.
+    bucket_affinity: float = 4.0
 
 
 @dataclasses.dataclass
@@ -40,6 +47,11 @@ class FrontendStats:
     retried: int = 0
     rejected_no_backend: int = 0
     per_replica: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # bucket name -> count, and bucket name -> node-class name -> count
+    routed_by_bucket: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    per_bucket_class: Dict[str, Dict[str, int]] = dataclasses.field(
+        default_factory=dict)
 
 
 # ------------------------------------------------------------------ #
@@ -195,15 +207,21 @@ class TenantLimiter:
 class ServiceFrontend:
     def __init__(self, fleet: Fleet, replicas: ReplicaRegistry,
                  monitor: HealthMonitor,
-                 cfg: Optional[FrontendConfig] = None):
+                 cfg: Optional[FrontendConfig] = None,
+                 perf: Optional[PerfModel] = None,
+                 catalog: Optional[Dict[str, ArchConfig]] = None):
         self.fleet = fleet
         self.replicas = replicas
         self.monitor = monitor
         self.cfg = cfg if cfg is not None else FrontendConfig()
+        self.perf = perf if perf is not None else PerfModel()
+        self.catalog = catalog if catalog is not None else ZOO
         self.stats = FrontendStats()
         self.tenants = TenantLimiter()
         self._last_pick: Dict[str, int] = {}
         self._pick_seq = 0
+        # (model, bucket, live-class set, calibration epoch) -> scores
+        self._score_cache: Dict[tuple, Dict[str, float]] = {}
 
     # ------------------------------------------------------------- #
     def _replica_load(self, key: ReplicaKey) -> Optional[float]:
@@ -231,10 +249,44 @@ class ServiceFrontend:
                 out.append(info.key)
         return out
 
-    def pick(self, model: str,
-             exclude: Optional[set] = None) -> Optional[ReplicaKey]:
+    def _class_scores(self, model: str,
+                      bucket: SizeBucket) -> Dict[str, float]:
+        """Per-node-class routing scores (1.0 = best class) for one
+        (model, bucket), over the classes that currently host healthy
+        replicas of the model.  Cached; the cache key carries the live
+        class set and the perf model's calibration epoch so topology
+        changes and new measured rows invalidate naturally."""
+        if model not in self.catalog:
+            return {}
+        cfg = self.catalog.get(model)
+        klasses = {}
+        for info in self.replicas.for_model(model):
+            node = self.fleet.nodes.get(info.key.node_id)
+            if node is not None and node.alive:
+                klasses[node.klass.name] = node.klass
+        if len(klasses) < 2:
+            return {}          # homogeneous: nothing to discriminate
+        key = (model, bucket.name, tuple(sorted(klasses)),
+               self.perf.calibration_count())
+        if key not in self._score_cache:
+            self._score_cache[key] = self.perf.routing_scores(
+                klasses.values(), cfg, bucket)
+        return self._score_cache[key]
+
+    def pick(self, model: str, exclude: Optional[set] = None,
+             bucket: Optional[SizeBucket] = None) -> Optional[ReplicaKey]:
         """Weighted least-connections with round-robin tie-breaking (so
-        instantly-completing requests still spread across replicas)."""
+        instantly-completing requests still spread across replicas).
+
+        With a `bucket`, the request-size policy folds in: replicas on a
+        class the perf model scores poorly for this bucket carry extra
+        virtual connections (`bucket_affinity` per unit of mismatch), so
+        short chats drift to cheap legacy classes and long-context
+        requests to fast big-VRAM classes — but a hammered "right" class
+        still sheds load onto the "wrong" one (it is a preference, not a
+        partition)."""
+        scores = self._class_scores(model, bucket) \
+            if bucket is not None else {}
         best, best_key = None, None
         for info in self.replicas.for_model(model):
             if exclude and info.key in exclude:
@@ -242,6 +294,11 @@ class ServiceFrontend:
             load = self._replica_load(info.key)
             if load is None:
                 continue
+            if scores:
+                node = self.fleet.nodes.get(info.key.node_id)
+                if node is not None:
+                    mismatch = scores.get(node.klass.name, 1.0) - 1.0
+                    load += self.cfg.bucket_affinity * mismatch
             last = self._last_pick.get(str(info.key), -1)
             sort_key = (load, last)
             if best_key is None or sort_key < best_key:
@@ -262,10 +319,11 @@ class ServiceFrontend:
         terminal failure) fires exactly once on exit."""
         tried: set = set()
         last_code = CODE_ENGINE_FAILED
+        bucket = bucket_for(len(req.prompt), req.sampling.max_tokens)
         req._suppress_finish = True
         try:
             for attempt in range(self.cfg.max_retries + 1):
-                key = self.pick(req.model, exclude=tried)
+                key = self.pick(req.model, exclude=tried, bucket=bucket)
                 if key is None:
                     self.stats.rejected_no_backend += 1
                     req.finish(error="no healthy backend",
@@ -280,6 +338,12 @@ class ServiceFrontend:
                     rk = str(key)
                     self.stats.per_replica[rk] = \
                         self.stats.per_replica.get(rk, 0) + 1
+                    self.stats.routed_by_bucket[bucket.name] = \
+                        self.stats.routed_by_bucket.get(bucket.name, 0) + 1
+                    by_class = self.stats.per_bucket_class.setdefault(
+                        bucket.name, {})
+                    kn = node.klass.name
+                    by_class[kn] = by_class.get(kn, 0) + 1
                     self.monitor.observe_latency(rk, time.monotonic() - t0)
                     return True
                 # backend refused / died mid-submit: reset & fail over

@@ -3,7 +3,7 @@ deployed replicas (what the SDAI dashboard's agent cards render)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.configs.base import ArchConfig
 

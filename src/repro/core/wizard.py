@@ -9,7 +9,7 @@ model distribution, agent distribution — plus the rendered frontend config
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
 from repro.core.controller import SDAIController
 from repro.core.placement import ModelDemand, PlacementPlan, place
@@ -135,7 +135,7 @@ class ConfigWizard:
         """HAProxy-style config text (one frontend+backend per model)."""
         lines = ["global", "  maxconn 4096", "defaults",
                  "  timeout connect 5s", "  timeout server 300s",
-                 f"listen stats", f"  bind *:{stats_port}",
+                 "listen stats", f"  bind *:{stats_port}",
                  "  stats enable"]
         for model, port in sorted(ports.items()):
             lines += [f"frontend ft_{model}", f"  bind *:{port}",

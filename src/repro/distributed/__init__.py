@@ -1,7 +1,7 @@
-from repro.distributed.sharding import (Strategy, make_sharder,
-                                        tree_shardings, pick_strategy,
+from repro.distributed.sharding import (STRATEGIES, Strategy, make_sharder,
+                                        pick_strategy, serve_strategy,
                                         train_strategy, train_strategy_fsdp,
-                                        serve_strategy, STRATEGIES)
+                                        tree_shardings)
 
 __all__ = ["Strategy", "make_sharder", "tree_shardings", "pick_strategy",
            "train_strategy", "train_strategy_fsdp", "serve_strategy",

@@ -297,7 +297,6 @@ def train_strategy(mesh: Mesh, name: str = "fsdp_tp") -> Strategy:
     Activations: batch over DP, seq over TP (Megatron-SP style residual).
     """
     dp, tp = _dp(mesh), _tp(mesh)
-    all_ = dp + tp
     rules = {
         # params
         "embed": [dp],

@@ -10,11 +10,11 @@ Usage:
     python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
     python -m repro.launch.dryrun --all --mesh both --out results/dryrun
 """
-import argparse
-import json
-import time
-import traceback
-from pathlib import Path
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,

@@ -6,8 +6,7 @@ These are the functions the dry-run lowers and the launchers execute.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -15,12 +14,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeSpec
 from repro.distributed.sharding import (Strategy, make_sharder,
-                                        make_weight_sharder,
-                                        make_tp_projector, make_tp_gather,
                                         make_tp_col_projector,
+                                        make_tp_gather, make_tp_projector,
+                                        make_weight_sharder, pick_strategy,
                                         train_compute_strategy,
-                                        tree_shardings, pick_strategy)
-from repro.models import build, Model
+                                        tree_shardings)
+from repro.models import Model, build
 from repro.training import optimizer as opt_lib
 
 PyTree = Any
@@ -162,7 +161,9 @@ def state_shardings(cfg: ArchConfig, mesh: Mesh, strategy: Strategy):
 def state_specs(cfg: ArchConfig):
     model = build(cfg)
     p = model.param_specs()
-    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    def f32(s):
+        return jax.ShapeDtypeStruct(s.shape, jnp.float32)
+
     return {"params": p,
             "opt": {"m": jax.tree.map(f32, p), "v": jax.tree.map(f32, p)},
             "step": jax.ShapeDtypeStruct((), jnp.int32)}

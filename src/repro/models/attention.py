@@ -8,9 +8,6 @@ KV blocks, so lowering stays small and activation memory stays O(chunk).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -11,8 +11,7 @@ provided by the distribution layer (identity on single device).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

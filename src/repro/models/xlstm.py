@@ -7,8 +7,6 @@ time) — its input projections are hoisted out of the time scan.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
-
 import jax
 import jax.numpy as jnp
 
@@ -187,8 +185,6 @@ def init_cache(cfg: ArchConfig, batch: int, **_):
 
     def rep(x):
         return jnp.zeros((p,) + x.shape, x.dtype) if x is not None else None
-    m = ssm_lib.mlstm_init_state(batch, nh, hd_m)
-    s = ssm_lib.slstm_init_state(batch, nh, hd_s)
     return {
         "mC": jnp.zeros((p, batch, nh, hd_m, hd_m), jnp.float32),
         "mn": jnp.zeros((p, batch, nh, hd_m), jnp.float32),

@@ -1,6 +1,6 @@
-from repro.roofline.analysis import (Roofline, analyze, collective_bytes,
-                                     model_flops_for, PEAK_FLOPS, HBM_BW,
-                                     LINK_BW)
+from repro.roofline.analysis import (HBM_BW, LINK_BW, PEAK_FLOPS, Roofline,
+                                     analyze, collective_bytes,
+                                     model_flops_for)
 
 __all__ = ["Roofline", "analyze", "collective_bytes", "model_flops_for",
            "PEAK_FLOPS", "HBM_BW", "LINK_BW"]

@@ -21,6 +21,21 @@ PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
 HBM_BW = 819e9               # bytes/s per chip
 LINK_BW = 50e9               # bytes/s per ICI link
 
+
+def roofline_step_s(flops: float, hbm_bytes: float,
+                    peak_flops: float = PEAK_FLOPS,
+                    hbm_bw: float = HBM_BW) -> float:
+    """Idealized step time under a two-term roofline: compute and memory
+    perfectly overlap, so the step takes the *max* of the two terms.
+
+    Parameterized over the capability vector (peak FLOP/s, HBM bytes/s)
+    so the per-GPU-class perf model (`repro.core.perfmodel`) can reuse
+    the same machinery the dry-run `analyze()` path applies to compiled
+    HLO — the defaults keep the historical v5e constants."""
+    if peak_flops <= 0 or hbm_bw <= 0:
+        return float("inf")
+    return max(flops / peak_flops, hbm_bytes / hbm_bw)
+
 _DTYPE_BYTES = {
     "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
     "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,

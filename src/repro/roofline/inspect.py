@@ -8,9 +8,9 @@ op_name paths.  This is the dry-run substitute for a wall-clock profile.
     PYTHONPATH=src python -m repro.roofline.inspect --arch mixtral-8x22b \
         --shape train_4k [--mesh single] [--top 15] [--strategy ...]
 """
-import argparse
-import re
-from collections import defaultdict
+import argparse  # noqa: E402
+import re  # noqa: E402
+from collections import defaultdict  # noqa: E402
 
 
 def inspect(arch: str, shape_name: str, mesh_kind: str = "single",

@@ -1,4 +1,4 @@
-from repro.serving.engine import InferenceEngine, EngineConfig, EngineFailure
+from repro.serving.engine import EngineConfig, EngineFailure, InferenceEngine
 from repro.serving.kv_cache import PagedKVPool, SlotPool
 from repro.serving.request import Request, RequestState
 from repro.serving.sampler import SamplingParams, sample_batched

@@ -96,6 +96,10 @@ def _next_pow2(n: int) -> int:
     return p
 
 
+def _identity(p):
+    return p
+
+
 class InferenceEngine:
     """One model instance on one node."""
 
@@ -149,7 +153,7 @@ class InferenceEngine:
             self._dequant = q_lib.dequant_tree
         else:
             self.params = params
-            self._dequant = lambda p: p
+            self._dequant = _identity
 
         src_len = engine_cfg.max_len if cfg.is_encdec else 0
         self.cache = self._init_cache(src_len)

@@ -7,10 +7,9 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import shutil
 import tempfile
 from pathlib import Path
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

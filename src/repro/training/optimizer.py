@@ -5,7 +5,7 @@ of the paper's "fully use each node's VRAM").
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +44,8 @@ def global_norm(tree) -> jax.Array:
 
 
 def adamw_init(params) -> Dict[str, PyTree]:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {"m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params)}
 
@@ -128,11 +129,7 @@ def adafactor_update(params, grads, opt_state, step, cfg: AdafactorConfig):
         u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
         return (p.astype(jnp.float32) - cfg.lr * u).astype(p.dtype), st2
 
-    flat_p, tdef = jax.tree.flatten(params)
-    flat_g = jax.tree.leaves(grads)
-    sts = opt_state["fac"]
-    flat_s = [sts[k] if isinstance(sts, dict) else None
-              for k in range(len(flat_p))] if False else None
+    tdef = jax.tree.structure(params)
     # rebuild via tree to keep structures aligned
     paired = jax.tree.map(lambda p, g: (p, g), params, grads)
     out_p, out_s = [], []

@@ -13,19 +13,19 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.distributed.sharding import Strategy, tree_shardings
+from repro.distributed.sharding import Strategy
 from repro.launch.steps import make_train_step, state_shardings
 from repro.models import build
+from repro.training import compression as comp_lib
 from repro.training import optimizer as opt_lib
 from repro.training.checkpoint import CheckpointManager
-from repro.training.data import SyntheticLM, DataConfig
-from repro.training import compression as comp_lib
+from repro.training.data import DataConfig, SyntheticLM
 
 
 @dataclasses.dataclass

@@ -1,5 +1,3 @@
-import dataclasses
-
 import jax
 import numpy as np
 import pytest

@@ -4,14 +4,12 @@ reproducible — kill schedules fire at exact steps, and a faulted run's
 greedy output is token-identical to the fault-free run."""
 import time
 
-import pytest
-
 from repro.api import (ErrorCode, Gateway, RuntimeConfig,
                        StreamEventType)
 from repro.cluster import BackendNode, FaultInjector, FaultSpec, Fleet
 from repro.configs import ARCHS
-from repro.core import (ModelCatalog, ModelDemand, ReplicaInfo,
-                        ReplicaKey, SDAIController)
+from repro.core import (ModelCatalog, ReplicaInfo, ReplicaKey,
+                        SDAIController)
 from repro.core.events import (FAULT_INJECTED, NODE_SUSPECTED,
                                REQUEST_MIGRATED, WATCHDOG_FIRED)
 from repro.core.health import NodeHealth
@@ -181,7 +179,7 @@ def test_seeded_chaos_soak_streams_survive_node_kill(param_store):
     inj = FaultInjector.kill_schedule(
         seed=1234, node_ids=list(fleet.nodes), n_kills=1,
         first_step=3).install(fleet, bus=ctrl.bus)
-    rt = gw.start(RuntimeConfig(tick_interval_s=0.02))
+    gw.start(RuntimeConfig(tick_interval_s=0.02))
     try:
         tenants = ["alpha", "beta", "gamma"]
         handles = [(p, gw.submit(MODEL, p, SamplingParams(max_tokens=n),

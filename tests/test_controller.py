@@ -2,14 +2,13 @@
 node failure -> reallocation, elastic join, wizard flow, unified client."""
 import dataclasses
 
-import jax
 import pytest
 
-from repro.cluster import paper_testbed, scale_fleet, Fleet, BackendNode
+from repro.cluster import BackendNode, paper_testbed, scale_fleet
 from repro.configs import ZOO
-from repro.core import (SDAIController, ControllerConfig, ModelDemand,
-                        ModelCatalog, Client, ConfigWizard, WizardConfig,
-                        WizardSelection, WizardModelChoice)
+from repro.core import (Client, ConfigWizard, ControllerConfig,
+                        ModelCatalog, ModelDemand, SDAIController,
+                        WizardConfig, WizardModelChoice, WizardSelection)
 from repro.serving import SamplingParams
 
 

@@ -1,13 +1,9 @@
 """Service Frontend (HAProxy analogue) + HealthMonitor: routing, load
 balancing fairness, failover, straggler demotion, heartbeat lifecycle."""
-import time
-
-import pytest
-
-from repro.cluster import Fleet, BackendNode
+from repro.cluster import BackendNode, Fleet
 from repro.configs import ZOO
-from repro.core.frontend import ServiceFrontend, FrontendConfig
-from repro.core.health import HealthMonitor, HealthConfig, NodeHealth
+from repro.core.frontend import FrontendConfig, ServiceFrontend
+from repro.core.health import HealthConfig, HealthMonitor, NodeHealth
 from repro.core.registry import ReplicaInfo, ReplicaKey, ReplicaRegistry
 from repro.serving.request import Request
 from repro.serving.sampler import SamplingParams

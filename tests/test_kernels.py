@@ -9,9 +9,6 @@ else is maskable (every test dies on the same line); on a toolchain where
 the API exists the marks disarm automatically and any kernel regression
 fails CI for real.
 """
-import dataclasses
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -25,11 +22,11 @@ pytestmark = pytest.mark.xfail(
     reason="installed jax's pallas.tpu lacks CompilerParams — kernels "
            "cannot run on this CPU toolchain (pre-existing, quarantined)")
 
-from repro.kernels import ops, ref
-from repro.kernels.flash_attention import flash_attention
-from repro.kernels.decode_attention import decode_attention
-from repro.kernels.int8_matmul import int8_matmul
-from repro.serving.quantization import quantize_array
+from repro.kernels import ops, ref  # noqa: E402
+from repro.kernels.decode_attention import decode_attention  # noqa: E402
+from repro.kernels.flash_attention import flash_attention  # noqa: E402
+from repro.kernels.int8_matmul import int8_matmul  # noqa: E402
+from repro.serving.quantization import quantize_array  # noqa: E402
 
 rng = np.random.default_rng(7)
 

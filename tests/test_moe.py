@@ -2,11 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import MoEConfig
 from repro.models import moe as moe_lib
+
+from _hypothesis_compat import given, settings, st
 
 rng = np.random.default_rng(11)
 

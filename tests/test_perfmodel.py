@@ -1,0 +1,251 @@
+"""Heterogeneity-aware perf model, size-bucket routing, cost-optimal
+placement, and class-aware elasticity (the Mélange-style cost story)."""
+from repro.cluster import NODE_CLASSES, PAPER_TESTBED, BackendNode, Fleet
+from repro.cluster.hardware import RUNTIME_RESERVE_FRACTION
+from repro.configs import ZOO
+from repro.core import ControllerConfig, ModelCatalog, ModelDemand, \
+    SDAIController
+from repro.core.frontend import FrontendConfig, ServiceFrontend
+from repro.core.health import HealthConfig, HealthMonitor
+from repro.core.perfmodel import (BUCKETS, DEFAULT_MIX, PerfModel,
+                                  bucket_for, bucket_named, normalize_mix)
+from repro.core.placement import (NodeSpec, as_vram_nodes, place,
+                                  place_cost_optimal, plan_cost_per_token,
+                                  plan_throughput)
+from repro.core.registry import ReplicaInfo, ReplicaKey, ReplicaRegistry
+from repro.serving.request import Request
+from repro.serving.sampler import SamplingParams
+
+GB = 1024 ** 3
+MODEL = "llama3.2-1b"
+
+
+# ------------------------------------------------------------------ #
+# buckets + analytical model basics
+# ------------------------------------------------------------------ #
+def test_bucket_for_boundaries():
+    assert bucket_for(8, 16).name == "short"
+    assert bucket_for(128, 128).name == "short"
+    assert bucket_for(129, 16).name == "medium"
+    assert bucket_for(16, 300).name == "medium"
+    assert bucket_for(600, 16).name == "long"
+    assert bucket_for(8, 4096).name == "long"
+
+
+def test_normalize_mix_sums_to_one_and_defaults():
+    mix = normalize_mix({"short": 3.0, "long": 1.0})
+    assert abs(sum(mix.values()) - 1.0) < 1e-9
+    assert abs(mix["short"] - 0.75) < 1e-9
+    default = normalize_mix(None)
+    assert set(default) == {name for name, _ in DEFAULT_MIX}
+
+
+def test_analytical_estimates_order_classes_sanely():
+    """A faster-memory class decodes faster; legacy is cheaper per short
+    token, big-VRAM cheaper per long token (the routing premise)."""
+    pm = PerfModel()
+    cfg = ZOO[MODEL]
+    legacy, big = NODE_CLASSES["v2-legacy"], NODE_CLASSES["v5e-1"]
+    short, long_ = bucket_named("short"), bucket_named("long")
+    assert pm.tokens_per_s(big, cfg, "decode", short) > \
+        pm.tokens_per_s(legacy, cfg, "decode", short)
+    assert pm.cost_per_token(legacy, cfg, short) < \
+        pm.cost_per_token(big, cfg, short)
+    scores = pm.routing_scores([legacy, big], cfg, short)
+    assert scores["v2-legacy"] == 1.0 and scores["v5e-1"] > 1.0
+    scores = pm.routing_scores([legacy, big], cfg, long_)
+    assert scores["v5e-1"] == 1.0 and scores["v2-legacy"] > 1.0
+
+
+# ------------------------------------------------------------------ #
+# calibration: measured rows override the analytical roofline
+# ------------------------------------------------------------------ #
+def test_calibration_overrides_analytical():
+    pm = PerfModel()
+    cfg = ZOO[MODEL]
+    klass = NODE_CLASSES["v5e-1"]
+    short = bucket_named("short")
+    before = pm.estimate(klass, cfg, "decode", short)
+    assert before.source == "analytical"
+    # a bench measured 3x the analytical rate on this class
+    pm.record(klass.name, cfg.name, "decode", short.name,
+              before.tokens_per_s * 3.0)
+    after = pm.estimate(klass, cfg, "decode", short)
+    assert after.source == "measured"
+    assert abs(after.tokens_per_s - before.tokens_per_s * 3.0) < 1e-6
+    # measured throughput flows straight into cost-per-token
+    assert pm.cost_per_token(klass, cfg, short) < \
+        klass.cost_rate / before.tokens_per_s + 1e-12
+    # other buckets / phases stay analytical
+    assert pm.estimate(klass, cfg, "prefill", short).source == "analytical"
+    assert pm.estimate(klass, cfg, "decode",
+                       bucket_named("long")).source == "analytical"
+
+
+def test_calibrate_from_bench_report_shape():
+    pm = PerfModel()
+    report = {"fused": {"b1": {"tok_per_s": 123.0},
+                        "b4": {"tok_per_s": 456.0},
+                        "junk": "not-a-row"}}
+    n = pm.calibrate_from_bench(report, "v5e-1", MODEL)
+    assert n == 2 * len(BUCKETS)
+    assert pm.calibration_count() == len(BUCKETS)   # one row per bucket
+    assert pm.measured("v5e-1", MODEL, "decode", "short") == 456.0
+
+
+# ------------------------------------------------------------------ #
+# size-bucket routing through the frontend
+# ------------------------------------------------------------------ #
+def _hetero_frontend():
+    fleet = Fleet([BackendNode("leg0", "v2-legacy"),
+                   BackendNode("leg1", "v2-legacy"),
+                   BackendNode("big0", "v5e-1"),
+                   BackendNode("big1", "v5e-1")])
+    monitor = HealthMonitor(HealthConfig())
+    replicas = ReplicaRegistry()
+    cfg = ZOO[MODEL]
+    for node in fleet.nodes.values():
+        inst = node.deploy(cfg, quantize="int8", n_slots=4, max_len=1024,
+                           real=False)
+        replicas.add(ReplicaInfo(ReplicaKey(node.node_id,
+                                            inst.instance_id),
+                                 MODEL, "int8", 4, 1024, inst.bytes))
+        monitor.observe_heartbeat(node.node_id)
+    fe = ServiceFrontend(fleet, replicas, monitor, FrontendConfig())
+    return fleet, fe
+
+
+def test_short_routes_to_legacy_long_to_big_vram():
+    """Under concurrent mixed traffic, short chats land on the cheap
+    legacy class and long-context requests on the big-VRAM class."""
+    fleet, fe = _hetero_frontend()
+    for _ in range(12):
+        assert fe.submit(Request(model=MODEL, prompt=[1] * 8,
+                                 sampling=SamplingParams(max_tokens=4)))
+        assert fe.submit(Request(model=MODEL, prompt=[1] * 600,
+                                 sampling=SamplingParams(max_tokens=4)))
+    short = fe.stats.per_bucket_class["short"]
+    long_ = fe.stats.per_bucket_class["long"]
+    assert short.get("v2-legacy", 0) == 12 and "v5e-1" not in short
+    assert long_.get("v5e-1", 0) == 12 and "v2-legacy" not in long_
+    assert fe.stats.routed_by_bucket == {"short": 12, "long": 12}
+
+
+def test_bucket_routing_is_preference_not_partition():
+    """If every big-VRAM replica dies, long requests still get served —
+    the affinity is a virtual-load nudge, not a hard partition."""
+    fleet, fe = _hetero_frontend()
+    fleet.fail_node("big0")
+    fleet.fail_node("big1")
+    req = Request(model=MODEL, prompt=[1] * 600,
+                  sampling=SamplingParams(max_tokens=4))
+    assert fe.submit(req)
+    assert req.node in ("leg0", "leg1")
+
+
+# ------------------------------------------------------------------ #
+# cost-optimal placement vs the class-blind VRAM packer
+# ------------------------------------------------------------------ #
+def _testbed_specs():
+    out = {}
+    for i, (nid, kname) in enumerate(PAPER_TESTBED):
+        klass = NODE_CLASSES[kname]
+        free = int(klass.hbm_total * (1 - RUNTIME_RESERVE_FRACTION))
+        out[nid] = NodeSpec(free, klass)
+    return out
+
+
+def test_cost_optimal_beats_vram_packer_at_equal_demand():
+    nodes = _testbed_specs()
+    demands = [
+        ModelDemand(ZOO[MODEL], min_replicas=2, max_len=2048,
+                    bucket_mix=(("short", 0.7), ("medium", 0.3))),
+        ModelDemand(ZOO["deepseek-r1-7b"], min_replicas=1, max_len=4096,
+                    bucket_mix=(("long", 1.0),)),
+    ]
+    perf = PerfModel()
+    vram = place(as_vram_nodes(nodes), demands, fill=False)
+    cost = place_cost_optimal(nodes, demands, perf, fill=False)
+    # equal placed demand: same replica counts, nothing dropped
+    assert not vram.unplaced and not cost.unplaced
+    assert len(vram.assignments) == len(cost.assignments)
+    # VRAM budgets respected
+    used = {}
+    for a in cost.assignments:
+        used[a.node_id] = used.get(a.node_id, 0) + a.bytes
+    for nid, total in used.items():
+        assert total <= nodes[nid].free
+    # and the cost-aware mix is strictly cheaper per modeled token
+    cpt_vram = plan_cost_per_token(vram, nodes, demands, perf)
+    cpt_cost = plan_cost_per_token(cost, nodes, demands, perf)
+    assert cpt_cost < cpt_vram
+
+
+def test_slo_top_up_adds_replicas_until_target_met():
+    nodes = _testbed_specs()
+    perf = PerfModel()
+    base = ModelDemand(ZOO[MODEL], min_replicas=1, max_replicas=4,
+                       bucket_mix=(("short", 1.0),))
+    lone = place_cost_optimal(nodes, [base], perf, fill=False)
+    one_rep = plan_throughput(lone, nodes, [base], perf)[MODEL]
+    hungry = ModelDemand(ZOO[MODEL], min_replicas=1, max_replicas=4,
+                         bucket_mix=(("short", 1.0),),
+                         target_tokens_per_s=one_rep * 2.5)
+    plan = place_cost_optimal(nodes, [hungry], perf, fill=False)
+    assert len(plan.assignments) >= 3
+    assert plan_throughput(plan, nodes, [hungry], perf)[MODEL] >= \
+        one_rep * 2.5
+
+
+# ------------------------------------------------------------------ #
+# class-aware elasticity in the controller
+# ------------------------------------------------------------------ #
+def _hetero_controller():
+    # v5lite-1 runs this model at ~2x the modeled cost-per-token of
+    # v2-legacy (3.5x the price for <2x the speed), so cost strictly
+    # orders the classes
+    fleet = Fleet([BackendNode("leg0", "v2-legacy"),
+                   BackendNode("leg1", "v2-legacy"),
+                   BackendNode("exp0", "v5lite-1")])
+    catalog = ModelCatalog()
+    catalog.register(ZOO[MODEL])
+    ctrl = SDAIController(fleet, catalog,
+                          ControllerConfig(fill_vram=False))
+    ctrl.discover()
+    return fleet, ctrl
+
+
+def _one_per_node_demand():
+    # bf16-only and sized so a 6GB legacy node fits exactly one replica:
+    # the class choice is the only degree of freedom left
+    return ModelDemand(ZOO[MODEL], min_replicas=1, max_replicas=3,
+                       n_slots=8, max_len=2048, allow_quant=False,
+                       bucket_mix=(("short", 1.0),))
+
+
+def test_scale_up_picks_cheapest_satisfying_class():
+    fleet, ctrl = _hetero_controller()
+    plan = ctrl.deploy([_one_per_node_demand()])
+    assert not plan.unplaced
+    first = {a.node_id for a in plan.assignments}
+    assert first <= {"leg0", "leg1"}       # short mix: legacy cheapest
+    assert ctrl.scale_up(MODEL)
+    hosts = {info.key.node_id
+             for info in ctrl.replicas.for_model(MODEL)}
+    # the delta replica also lands on the cheaper class while a node
+    # of it still has room, not on the pricier v5lite-1 node
+    assert hosts == {"leg0", "leg1"}
+
+
+def test_scale_down_retires_most_expensive_class_first():
+    fleet, ctrl = _hetero_controller()
+    ctrl.deploy([_one_per_node_demand()])
+    for _ in range(2):
+        assert ctrl.scale_up(MODEL)
+    hosts = {info.key.node_id
+             for info in ctrl.replicas.for_model(MODEL)}
+    assert hosts == {"leg0", "leg1", "exp0"}    # cheap full -> pricey
+    assert ctrl.scale_down(MODEL)
+    hosts = {info.key.node_id
+             for info in ctrl.replicas.for_model(MODEL)}
+    assert hosts == {"leg0", "leg1"}    # most expensive retired first

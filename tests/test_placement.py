@@ -1,15 +1,10 @@
 """VRAM-aware placement: unit + hypothesis property tests of the paper's
 core invariants."""
-import dataclasses
-
-import pytest
-from _hypothesis_compat import given, settings, st
-
-from repro.configs import ZOO, ARCHS
-from repro.configs.base import ArchConfig
+from repro.configs import ZOO
 from repro.core.placement import (ModelDemand, place, place_naive,
-                                  reallocation_plan, plan_utilization,
-                                  PRECISIONS)
+                                  plan_utilization, reallocation_plan)
+
+from _hypothesis_compat import given, settings, st
 
 GB = 1024 ** 3
 

@@ -8,7 +8,7 @@ import time
 
 import pytest
 
-from repro.api import (ErrorCode, Gateway, GatewayConfig, RuntimeConfig,
+from repro.api import (ErrorCode, Gateway, RuntimeConfig,
                        StreamEventType, TenantQuota)
 from repro.cluster import BackendNode, Fleet
 from repro.configs import ARCHS

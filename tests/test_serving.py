@@ -1,21 +1,20 @@
 """Serving stack: engine continuous batching, slot pool invariants
 (hypothesis), scheduler, sampler, quantization."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
 
-from repro.configs import ARCHS, ZOO
+from repro.configs import ARCHS
 from repro.models import build
-from repro.serving import (InferenceEngine, EngineConfig, Request,
+from repro.serving import (EngineConfig, InferenceEngine, Request,
                            RequestState, SamplingParams, Scheduler,
                            SchedulerConfig)
-from repro.serving.kv_cache import SlotPool
 from repro.serving import quantization as q_lib
+from repro.serving.kv_cache import SlotPool
 from repro.serving.sampler import sample
+
+from _hypothesis_compat import given, settings, st
 
 
 @pytest.fixture(scope="module")

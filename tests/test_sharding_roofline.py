@@ -4,8 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.roofline.analysis import collective_bytes
 from repro.roofline import hlo_profile as hp
+from repro.roofline.analysis import collective_bytes
 
 
 class FakeMesh:

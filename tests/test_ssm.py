@@ -1,12 +1,12 @@
 """SSM / recurrent core equivalences (the xLSTM & Hymba math):
 parallel == chunkwise == recurrent, property-tested over shapes/gates."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
 
 from repro.models import ssm
+
+from _hypothesis_compat import given, settings, st
 
 rng = np.random.default_rng(3)
 

@@ -14,8 +14,8 @@ import pytest
 
 from repro.cluster import paper_testbed
 from repro.configs import ZOO
-from repro.core import (SDAIController, ControllerConfig, ModelDemand,
-                        ModelCatalog, Client)
+from repro.core import (Client, ControllerConfig, ModelCatalog,
+                        ModelDemand, SDAIController)
 from repro.serving import SamplingParams
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

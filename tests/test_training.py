@@ -1,19 +1,18 @@
 """Training substrate: optimizer, checkpoint roundtrip + crash-resume
 equality, deterministic data, gradient-compression error feedback."""
-import shutil
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
 
 from repro.configs import ARCHS
-from repro.training import optimizer as opt_lib
 from repro.training import checkpoint as ckpt_lib
 from repro.training import compression as comp_lib
-from repro.training.data import SyntheticLM, DataConfig, host_shard
-from repro.training.train_loop import Trainer, TrainConfig
+from repro.training import optimizer as opt_lib
+from repro.training.data import DataConfig, SyntheticLM, host_shard
+from repro.training.train_loop import TrainConfig, Trainer
+
+from _hypothesis_compat import given, settings, st
 
 
 # --------------------------- optimizer ------------------------------ #
