@@ -1,0 +1,32 @@
+"""repro.analysis — concurrency & hot-path static analyzer.
+
+AST-based checkers for the runtime's machine-checked invariants
+(canonical lock order, guarded shared state, hot-path host-sync
+discipline, mutable defaults, page-refcount pairing), a waiver
+baseline, and a runtime `LockOrderTracker` that cross-validates actual
+acquisition orders during the tier-1 suite.
+
+Run `python -m repro.analysis --check` (CI's static-analysis gate).
+Pure stdlib — importable without jax.
+"""
+from repro.analysis.baseline import Baseline
+from repro.analysis.core import (Checker, ProjectIndex, Violation,
+                                 load_modules, run_checkers)
+from repro.analysis.defaults import MutableDefaultChecker
+from repro.analysis.hotpath import HotPathSyncChecker
+from repro.analysis.locks import (CANONICAL_ORDER, LOCK_RANKS,
+                                  LockOrderChecker, allowed_edges)
+from repro.analysis.refcount import RefcountChecker
+from repro.analysis.shared_state import (ALLOWED_LOCKFREE,
+                                         SharedStateChecker)
+from repro.analysis.tracker import (LockOrderTracker, TrackedLock,
+                                    install, uninstall)
+
+__all__ = [
+    "ALLOWED_LOCKFREE", "Baseline", "CANONICAL_ORDER", "Checker",
+    "HotPathSyncChecker", "LOCK_RANKS", "LockOrderChecker",
+    "LockOrderTracker", "MutableDefaultChecker", "ProjectIndex",
+    "RefcountChecker", "SharedStateChecker", "TrackedLock", "Violation",
+    "allowed_edges", "install", "load_modules", "run_checkers",
+    "uninstall",
+]

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Tuple
 
 from repro.core.events import FAILURE_EVENT_KINDS
 from repro.core.frontend import TenantQuota
@@ -208,7 +208,7 @@ class AdminAPI:
     automatically by `Gateway.__init__`) to enable `drain_model`."""
 
     def __init__(self, controller: "SDAIController",
-                 gateway: Optional["Gateway"] = None):
+                 gateway: Optional["Gateway"] = None) -> None:
         self.c = controller
         self.gateway = gateway
 
@@ -223,7 +223,7 @@ class AdminAPI:
             if alive:
                 for r in c.replicas.on_node(nid):
                     inst = node.instances.get(r.key.instance_id)
-                    pages = {}
+                    pages: Dict[str, Any] = {}
                     if inst is not None:
                         if inst.engine is not None:
                             # instance lock: page_stats iterates pool
@@ -279,7 +279,7 @@ class AdminAPI:
             for m in c.replicas.models())
         routing = {m: tuple(str(k) for k in c.frontend.healthy_replicas(m))
                    for m in c.replicas.models()}
-        tenants = []
+        tenants: List[TenantSnapshot] = []
         for name, entry in sorted(c.frontend.tenants.snapshot().items()):
             quota, usage = entry["quota"], entry["usage"]
             tenants.append(TenantSnapshot(
@@ -427,7 +427,7 @@ class AdminAPI:
                         remaining=gw.inflight(model))
         return gw.inflight(model)
 
-    def resume_model(self, model: str):
+    def resume_model(self, model: str) -> None:
         if self.gateway is not None:
             self.gateway._draining.discard(model)
 
@@ -452,7 +452,7 @@ class AdminAPI:
                         weight=quota.weight)
         return quota
 
-    def remove_tenant_quota(self, tenant: str):
+    def remove_tenant_quota(self, tenant: str) -> None:
         """Lift a tenant's rate limits (usage history is kept)."""
         self.c.frontend.tenants.set_quota(tenant, None)
         self.c.bus.emit("tenant_quota_removed", tenant=tenant)

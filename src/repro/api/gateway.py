@@ -117,8 +117,10 @@ class GenerationHandle:
     def _on_finish(self, req: Request):
         if req is not self.internal or self._done:
             return
+        with self._cv:                 # _on_token writes under _cv
+            emitted = self._emitted
         if (req.error_code == CODE_ENGINE_FAILED and not req.cancelled
-                and self._emitted > 0
+                and emitted > 0
                 and len(req.output) >= req.sampling.max_tokens):
             # the journal is already complete: the backend died between
             # its last token and the finish bookkeeping — every token
@@ -129,7 +131,7 @@ class GenerationHandle:
             return
         if (req.error_code == CODE_ENGINE_FAILED and not req.cancelled
                 and self._retries_left > 0):
-            if self._emitted == 0:
+            if emitted == 0:
                 # backend died before the stream produced anything:
                 # re-route transparently on a fresh internal request
                 self._retries_left -= 1
@@ -354,7 +356,8 @@ class Gateway:
         return self.c.replicas.models()
 
     def inflight(self, model: str) -> int:
-        return self._inflight.get(model, 0)
+        with self._inflight_lock:
+            return self._inflight.get(model, 0)
 
     # ------------------------------------------------------------- #
     def _pump(self):

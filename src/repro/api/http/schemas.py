@@ -62,7 +62,7 @@ def error_body(err: APIError) -> Dict[str, Any]:
 class WireError(Exception):
     """A request that must be answered with a structured HTTP error."""
 
-    def __init__(self, code: ErrorCode, message: str):
+    def __init__(self, code: ErrorCode, message: str) -> None:
         super().__init__(f"[{code.value}] {message}")
         self.error = APIError(code, message)
 
@@ -79,7 +79,9 @@ def _invalid(msg: str) -> WireError:
     return WireError(ErrorCode.INVALID_REQUEST, msg)
 
 
-def _field(body: Dict, name: str, types, default=None, required=False):
+def _field(body: Dict, name: str,
+           types: Union[type, Tuple[type, ...]],
+           default: Any = None, required: bool = False) -> Any:
     if name not in body or body[name] is None:
         if required:
             raise _invalid(f"missing required field {name!r}")

@@ -554,7 +554,8 @@ class GatewayHTTPServer:
         if self._httpd is not None:
             return self
         self.gateway.start(self._runtime_cfg)    # background pumps drive
-        self._closing = False
+        with self._state_cv:           # _enter/_leave race a restart
+            self._closing = False
         self._pool = ThreadPoolExecutor(
             max_workers=self.cfg.max_workers,
             thread_name_prefix="http-worker")

@@ -254,7 +254,8 @@ class ServingRuntime:
     def tick_once(self):
         """One controller iteration with fresh load feedback.  New nodes
         (elastic joins / autoscale targets) get pump threads here."""
-        self.stats.ticks += 1
+        with self._stats_lock:         # pumps bump their counters too
+            self.stats.ticks += 1
         self._watchdog()
         self.gateway.c.tick(load=self.load_report())
         if not self._stopping.is_set():

@@ -52,7 +52,7 @@ class APIError:
 class GatewayError(RuntimeError):
     """Raised by strict API entry points; carries the structured error."""
 
-    def __init__(self, error: APIError):
+    def __init__(self, error: APIError) -> None:
         super().__init__(f"[{error.code.value}] {error.message}")
         self.error = error
 
@@ -67,7 +67,7 @@ class GenerationRequest:
     sampling: SamplingParams = SamplingParams()   # frozen -> safe default
     tenant: str = ""
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         object.__setattr__(self, "prompt", tuple(self.prompt))
 
 

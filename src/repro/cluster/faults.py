@@ -176,6 +176,7 @@ class FaultInjector:
                     stall_s = secs
                 else:
                     del self._stall[node.node_id]
+            swap_windows = bool(self._swap)
         # ---- apply outside the lock ---------------------------------- #
         if due:
             if self.bus is not None:
@@ -189,7 +190,7 @@ class FaultInjector:
                     victim = self.fleet.nodes.get(s.node)
                     if victim is not None and victim.alive:
                         victim.fail()
-        elif self._swap:
+        elif swap_windows:
             self._sync_swap_flags()    # windows also *expire* on steps
         if stall_s > 0:
             import time

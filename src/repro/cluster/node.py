@@ -306,19 +306,21 @@ class BackendNode:
         return emitted
 
     def _get_executor(self, n: int) -> ThreadPoolExecutor:
+        # under the node lock: recover() tears the pool down concurrently
         want = min(max(n, 1), 4)
-        if self._executor is not None and self._executor_size < want:
-            # the node grew (elastic scale-up): re-size so new instances
-            # actually overlap.  Safe: pump() waits on every future, so
-            # the old pool is idle here.
-            self._executor.shutdown(wait=False)
-            self._executor = None
-        if self._executor is None:
-            self._executor = ThreadPoolExecutor(
-                max_workers=want,
-                thread_name_prefix=f"step-{self.node_id}")
-            self._executor_size = want
-        return self._executor
+        with self.lock:
+            if self._executor is not None and self._executor_size < want:
+                # the node grew (elastic scale-up): re-size so new
+                # instances actually overlap.  Safe: pump() waits on
+                # every future, so the old pool is idle here.
+                self._executor.shutdown(wait=False)
+                self._executor = None
+            if self._executor is None:
+                self._executor = ThreadPoolExecutor(
+                    max_workers=want,
+                    thread_name_prefix=f"step-{self.node_id}")
+                self._executor_size = want
+            return self._executor
 
     def pump(self, max_steps: int = 1) -> int:
         """Advance all engines (the node's serving loop).  Multi-instance
@@ -351,8 +353,8 @@ class BackendNode:
     # ------------------------------------------------------------- #
     def fail(self):
         """Node-level outage (power/network loss)."""
-        self._alive = False
         with self.lock:
+            self._alive = False
             insts = list(self.instances.values())
         for inst in insts:
             if inst.engine:

@@ -349,7 +349,12 @@ class SDAIController:
                     # silently stranded
                     if inst.engine is not None:
                         inst.engine.fail()
-                    node.undeploy(info.key.instance_id)
+                # undeploy re-takes node.lock (held here, reentrant) —
+                # outside inst.lock so the instance -> node direction
+                # never appears in the acquisition order.  Safe: the
+                # engine is already failed, so a pump thread grabbing
+                # inst.lock now sees a dead engine and does nothing.
+                node.undeploy(info.key.instance_id)
             self.replicas.remove(info.key)
             self.scale_downs += 1
             self.bus.emit("autoscaled_down", model=model,

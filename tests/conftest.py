@@ -8,6 +8,25 @@ import pytest
 jax.config.update("jax_platform_name", "cpu")
 
 
+@pytest.fixture(scope="session", autouse=True)
+def lock_order_tracker():
+    """Runtime cross-check of the static lock hierarchy: every
+    BackendNode/Instance/Scheduler built during the suite gets tracked
+    locks, and teardown asserts no acquisition ever violated the
+    canonical node -> instance -> scheduler order (see repro.analysis)."""
+    from repro.analysis import LockOrderTracker, install, uninstall
+    tracker = LockOrderTracker()
+    handle = install(tracker)
+    yield tracker
+    uninstall(handle)
+    assert tracker.violations == [], \
+        "lock-order violations observed at runtime:\n" + \
+        "\n".join(v.render() for v in tracker.violations)
+    assert tracker.disallowed_edges() == set(), \
+        f"acquisition edges outside the static hierarchy: " \
+        f"{sorted(tracker.disallowed_edges())}"
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

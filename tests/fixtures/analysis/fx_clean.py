@@ -1,0 +1,34 @@
+"""Fixture every checker passes: guarded state, canonical-only lock
+nesting, immutable defaults, no host syncs, no unpaired retains."""
+import threading
+
+
+class CleanCounter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.total = 0
+
+    def add(self, n):
+        with self._lock:
+            self.total += n
+
+    def snapshot(self):
+        with self._lock:
+            return self.total
+
+
+class CleanWalker:
+    def __init__(self, node, inst):
+        self.node = node
+        self.inst = inst
+
+    def walk(self):
+        with self.node.lock:            # node -> instance: canonical
+            with self.inst.lock:
+                return self.inst.engine
+
+
+def merge(items, extra=()):
+    out = list(items)
+    out.extend(extra)
+    return out

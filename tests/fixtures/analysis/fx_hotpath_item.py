@@ -1,0 +1,11 @@
+"""Seeded violation: a `.item()` host sync inside the engine step hot
+path (the checker roots reachability at InferenceEngine.step)."""
+
+
+class InferenceEngine:
+    def step(self):
+        logits = self._forward()
+        return logits.item()            # device->host sync: flagged
+
+    def _forward(self):
+        return None

@@ -1,0 +1,16 @@
+"""Seeded violation: scheduler -> node nesting inverts the canonical
+node -> instance -> scheduler hierarchy.  test_analysis asserts the
+lock-order checker flags `rebalance`."""
+import threading
+
+
+class BadPlanner:
+    def __init__(self, node, sched):
+        self.node = node
+        self.sched = sched
+        self._audit = threading.Lock()
+
+    def rebalance(self):
+        with self.sched._lock:          # scheduler (rank 2) held ...
+            with self.node.lock:        # ... node (rank 0): inversion
+                return list(self.node.instances)

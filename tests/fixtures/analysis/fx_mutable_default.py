@@ -1,0 +1,6 @@
+"""Seeded violation: a shared mutable default argument."""
+
+
+def collect(item, acc=[]):              # shared across calls: flagged
+    acc.append(item)
+    return acc

@@ -1,0 +1,14 @@
+"""Seeded violation: `retain(page)` with an exception exit before any
+release/record — the refcount-pairing checker must flag the leak."""
+
+
+class LeakyCache:
+    def __init__(self, pool):
+        self.pool = pool
+        self._entries = {}
+
+    def put(self, key, page):
+        self.pool.retain(page)
+        if key in self._entries:
+            raise KeyError(key)         # retained page leaks: flagged
+        self._entries[key] = page

@@ -1,0 +1,17 @@
+"""Seeded violation: `total` is written under `_lock` in `add` but
+lock-free in `sloppy_add` — the shared-state checker must flag the
+bare write."""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.total = 0
+
+    def add(self, n):
+        with self._lock:
+            self.total += n
+
+    def sloppy_add(self, n):
+        self.total += n                 # lock-free write: flagged
