@@ -6,6 +6,12 @@ v1, plus four studies:
 * paged KV cache — paged pool with oversubscribed slots vs contiguous
   per-slot strips at the *same KV VRAM budget*: concurrent-slot
   occupancy, kv-page utilization, preemptions, tok/s,
+* paged attention — the decode hot path reading the page pool directly
+  through the device page table vs gather/scatter logical views: KV
+  bytes moved per token, token-identical outputs, equal dispatches,
+* speculative decoding — on-device n-gram propose + single-dispatch
+  greedy verify vs per-token decode: accepted tokens per verify
+  dispatch, dispatch/sync reduction, token-identical outputs,
 * continuous runtime — >= 4 concurrent tenants across >= 2 nodes driven
   entirely by background pump threads (zero caller-side pumps), with
   per-tenant token-bucket rejections and load-driven controller scale-up,
@@ -198,6 +204,123 @@ def _paged_study(n_requests: int = 12, max_tokens: int = 24) -> dict:
         "kv_page_utilization":
             out["paged"]["kv_page_utilization"]
             / max(out["contiguous"]["kv_page_utilization"], 1e-9),
+    }
+    return out
+
+
+def _paged_attn_study(n_requests: int = 8, max_tokens: int = 24) -> dict:
+    """Paged-attention study: same paged engine, same workload, with the
+    decode hot path either materializing every slot's logical KV view
+    (gather + scatter per dispatch) or reading the page pool directly
+    through the device page table.  Dispatch/sync discipline must be
+    identical and greedy outputs token-identical; the win is logical KV
+    bytes moved per token.  Counters are deterministic."""
+    cfg = ARCHS["olmo-1b"].reduced()
+    params = _store(cfg)
+    out, outputs = {}, {}
+    for name, on in (("gather", False), ("paged_attn", True)):
+        eng = InferenceEngine(cfg, params,
+                              EngineConfig(n_slots=4, max_len=64,
+                                           decode_block=4, page_size=8,
+                                           paged_attention=on))
+        for _ in range(4):            # compile outside the clock
+            eng.submit(Request(model=cfg.name, prompt=[1, 2, 3],
+                               sampling=SamplingParams(max_tokens=2)))
+        eng.run_until_done()
+        base = eng.perf_stats()
+        reqs = [Request(model=cfg.name, prompt=[1, 2, 3 + (i % 5)],
+                        sampling=SamplingParams(max_tokens=max_tokens))
+                for i in range(n_requests)]
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.perf_counter()
+        eng.run_until_done()
+        wall = time.perf_counter() - t0
+        stats = eng.perf_stats()
+        toks = stats["tokens"] - base["tokens"]
+        bytes_moved = (stats["logical_bytes_moved"]
+                       - base["logical_bytes_moved"])
+        outputs[name] = [tuple(r.output) for r in reqs]
+        out[name] = {
+            "paged_attention": on,
+            "tokens": toks,
+            "dispatches": stats["dispatches"] - base["dispatches"],
+            "host_syncs": stats["host_syncs"] - base["host_syncs"],
+            "logical_bytes_moved": bytes_moved,
+            "logical_bytes_moved_per_token": bytes_moved / max(toks, 1),
+            "tok_per_s": toks / wall if wall > 0 else 0.0,
+        }
+    # the kernel is a memory optimization, never a numerics or
+    # scheduling change
+    assert outputs["paged_attn"] == outputs["gather"], \
+        "paged attention changed greedy outputs"
+    assert out["paged_attn"]["dispatches"] == out["gather"]["dispatches"]
+    assert out["paged_attn"]["host_syncs"] == out["gather"]["host_syncs"]
+    ratio = (out["gather"]["logical_bytes_moved_per_token"]
+             / max(out["paged_attn"]["logical_bytes_moved_per_token"], 1))
+    assert ratio >= 2.0, out
+    out["gain"] = {"logical_bytes_moved_per_token": ratio}
+    return out
+
+
+def _spec_study(n_requests: int = 6, max_tokens: int = 24) -> dict:
+    """Speculative-decoding study: greedy decode with the on-device
+    n-gram proposer + single-dispatch verify vs plain per-token decode
+    (decode_block=1) on a repetition-heavy workload.  Outputs must be
+    token-identical (greedy verify); the win is accepted tokens per
+    verify dispatch > 1, i.e. fewer dispatches and host syncs per
+    token.  Counters are deterministic."""
+    cfg = ARCHS["olmo-1b"].reduced()
+    params = _store(cfg)
+    out, outputs = {}, {}
+    for name, on in (("spec_off", False), ("spec_on", True)):
+        eng = InferenceEngine(cfg, params,
+                              EngineConfig(n_slots=4, max_len=64,
+                                           decode_block=1, page_size=8,
+                                           paged_attention=True,
+                                           speculative=on))
+        for _ in range(4):            # compile outside the clock
+            eng.submit(Request(model=cfg.name, prompt=[1, 2, 3],
+                               sampling=SamplingParams(max_tokens=2)))
+        eng.run_until_done()
+        base = eng.perf_stats()
+        reqs = [Request(model=cfg.name, prompt=[1, 2, 3 + (i % 5)],
+                        sampling=SamplingParams(max_tokens=max_tokens))
+                for i in range(n_requests)]
+        for r in reqs:
+            eng.submit(r)
+        t0 = time.perf_counter()
+        eng.run_until_done()
+        wall = time.perf_counter() - t0
+        stats = eng.perf_stats()
+        toks = stats["tokens"] - base["tokens"]
+        outputs[name] = [tuple(r.output) for r in reqs]
+        out[name] = {
+            "speculative": on,
+            "tokens": toks,
+            "dispatches_per_token":
+                (stats["dispatches"] - base["dispatches"])
+                / max(toks, 1),
+            "host_syncs_per_token":
+                (stats["host_syncs"] - base["host_syncs"])
+                / max(toks, 1),
+            "spec_dispatches":
+                stats["spec_dispatches"] - base["spec_dispatches"],
+            "spec_emitted": stats["spec_emitted"] - base["spec_emitted"],
+            "tok_per_s": toks / wall if wall > 0 else 0.0,
+        }
+        if on:
+            d = out[name]["spec_dispatches"]
+            out[name]["spec_accepted_per_dispatch"] = \
+                out[name]["spec_emitted"] / max(d, 1)
+    # greedy verify is provably lossless
+    assert outputs["spec_on"] == outputs["spec_off"], \
+        "speculative decoding changed greedy outputs"
+    assert out["spec_on"]["spec_accepted_per_dispatch"] > 1.0, out
+    out["gain"] = {
+        "dispatches_per_token":
+            out["spec_off"]["dispatches_per_token"]
+            / max(out["spec_on"]["dispatches_per_token"], 1e-12),
     }
     return out
 
@@ -518,6 +641,22 @@ def run(n_requests: int = 12, max_tokens: int = 24,
                  f"kv_page_util={paged['paged']['kv_page_utilization']:.3f};"
                  f"preemptions={paged['paged']['preemptions']};"
                  f"tok_per_s={paged['paged']['tok_per_s']:.1f}"))
+    pattn = _paged_attn_study()
+    report["paged_attn"] = pattn
+    rows.append(("serving_paged_attention", 0.0,
+                 f"bytes_per_token_gather="
+                 f"{pattn['gather']['logical_bytes_moved_per_token']:.0f};"
+                 f"bytes_per_token_paged="
+                 f"{pattn['paged_attn']['logical_bytes_moved_per_token']:.0f};"
+                 f"reduction_x"
+                 f"{pattn['gain']['logical_bytes_moved_per_token']:.1f}"))
+    spec = _spec_study()
+    report["spec"] = spec
+    rows.append(("serving_spec_decode", 0.0,
+                 f"accepted_per_dispatch="
+                 f"{spec['spec_on']['spec_accepted_per_dispatch']:.2f};"
+                 f"dispatch_reduction_x"
+                 f"{spec['gain']['dispatches_per_token']:.1f}"))
     prefix = _prefix_study()
     report["prefix"] = prefix
     rows.append(("serving_prefix_cache", 0.0,

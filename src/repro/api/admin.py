@@ -48,6 +48,12 @@ class InstanceSnapshot:
     host_pages_in_use: int = 0
     swap_outs: int = 0
     swap_ins: int = 0
+    # decode hot-path efficiency (paged attention + speculative decode);
+    # zeros when the engine runs the gather/scatter path without spec
+    paged_attention: bool = False
+    speculative: bool = False
+    logical_bytes_moved_per_token: float = 0.0
+    spec_accepted_per_dispatch: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -244,7 +250,16 @@ class AdminAPI:
                                     host_pages_in_use=(
                                         hp.in_use if hp else 0),
                                     swap_outs=eng.swap_outs,
-                                    swap_ins=eng.swap_ins)
+                                    swap_ins=eng.swap_ins,
+                                    paged_attention=eng._paged_attn,
+                                    speculative=eng._spec_ok,
+                                    logical_bytes_moved_per_token=(
+                                        eng.logical_bytes_moved
+                                        / max(eng.total_tokens, 1)),
+                                    spec_accepted_per_dispatch=(
+                                        eng.spec_emitted
+                                        / eng.spec_dispatches
+                                        if eng.spec_dispatches else 0.0))
                             frag = ps["page_fragmentation"]
                             pages = dict(
                                 page_size=int(ps["page_size"]),

@@ -179,7 +179,10 @@ class BackendNode:
                page_size: int = 16, kv_pages: int = 0,
                paged: bool = True, prefix_cache: bool = False,
                prefix_cache_pages: int = 0, host_kv_pages: int = 0,
-               prefix_share_tenants: bool = False) -> Instance:
+               prefix_share_tenants: bool = False,
+               paged_attention: bool = False,
+               speculative: bool = False,
+               spec_draft: int = 4) -> Instance:
         """Launch one model instance (the controller's startup-script
         analogue).  `kv_pages` sizes the paged KV pool (0 => the
         contiguous-equivalent budget); HBM is charged by page budget, not
@@ -209,7 +212,10 @@ class BackendNode:
                                  paged=paged, prefix_cache=prefix_cache,
                                  prefix_cache_pages=prefix_cache_pages,
                                  host_kv_pages=host_kv_pages,
-                                 prefix_share_tenants=prefix_share_tenants))
+                                 prefix_share_tenants=prefix_share_tenants,
+                                 paged_attention=paged_attention,
+                                 speculative=speculative,
+                                 spec_draft=spec_draft))
         inst = Instance(next(_inst_ids), cfg.name, cfg, quantize, n_slots,
                         max_len, need, engine, page_size=page_size,
                         kv_pages=eff_pages)

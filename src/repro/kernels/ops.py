@@ -13,6 +13,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.int8_matmul import int8_matmul as _int8_mm
+from repro.kernels.paged_attention import (
+    paged_decode_attention as _paged_decode,
+    paged_decode_attention_ref as _paged_decode_ref,
+    paged_suffix_attention_ref as _paged_suffix_ref)
 
 # interpret=True everywhere on CPU (the TPU target compiles the same calls
 # with interpret=False)
@@ -39,6 +43,26 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=0, prefix=0,
 def int8_matmul(x, w_q, scale, *, block_m=128, block_n=128, block_k=128):
     return _int8_mm(x, w_q, scale, block_m=block_m, block_n=block_n,
                     block_k=block_k, interpret=_INTERPRET)
+
+
+def paged_decode_attention(q, k_pool, v_pool, page_table, pos, *,
+                           window=0, prefix=0):
+    """Page-table-direct decode attention.  Routes to the Pallas kernel
+    on accelerator backends; the jittable fori_loop reference runs the
+    identical schedule on CPU and whenever `window` is traced (hymba's
+    per-layer global/local mix)."""
+    if _INTERPRET or not isinstance(window, int):
+        return _paged_decode_ref(q, k_pool, v_pool, page_table, pos,
+                                 window=window, prefix=prefix)
+    return _paged_decode(q, k_pool, v_pool, page_table, pos,
+                         window=window, prefix=prefix)
+
+
+def paged_suffix_attention(q, k_pool, v_pool, page_table, q_pos):
+    """Multi-query paged attention for speculative verify (plain causal);
+    pure-jnp reference on every backend — the verify dispatch is tiny
+    (Q = spec_draft + 1 rows)."""
+    return _paged_suffix_ref(q, k_pool, v_pool, page_table, q_pos)
 
 
 # --------------------------------------------------------------------- #

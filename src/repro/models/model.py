@@ -102,6 +102,22 @@ class Model:
             return xl.decode_step(params, self.cfg, cache, token, sh=sh)
         return tf.decode_step(params, self.cfg, cache, token, pos, sh=sh)
 
+    def decode_paged(self, params, cache, token, pos, page_table,
+                     write_table, *, sh=tf._id_sh):
+        """Decode one step directly against the paged KV pool via the
+        page-table-aware attention kernel — no gathered logical view.
+        Not defined for xlstm (no KV to page; the engine gates)."""
+        return tf.decode_step_paged(params, self.cfg, cache, token, pos,
+                                    page_table, write_table, sh=sh)
+
+    def verify_paged(self, params, cache, tokens, pos, page_table,
+                     write_table, *, sh=tf._id_sh):
+        """Speculative-decoding batched verify: Q tokens per row in one
+        paged forward, causal by absolute position.  Plain causal
+        decoders only — the engine gates eligibility."""
+        return tf.spec_verify_paged(params, self.cfg, cache, tokens, pos,
+                                    page_table, write_table, sh=sh)
+
 
 def build(cfg: ArchConfig) -> Model:
     return Model(cfg)

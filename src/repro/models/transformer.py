@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.kernels import ops as kernel_ops
 from repro.models import attention as attn_lib
 from repro.models import layers as L
 from repro.models import moe as moe_lib
@@ -804,4 +805,167 @@ def decode_step(params, cfg: ArchConfig, cache, token, pos, *,
     h = L.norm(h, params.get("final_norm"), cfg.norm)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = jnp.einsum("bsd,dv->bsv", h, head)[:, 0]
+    return logits, new_cache
+
+
+def _paged_write(cache_pool, new_kv, write_table, w_pos):
+    """Scatter per-row KV into the physical page pool through the write
+    table.  cache_pool: (P, ps, K, hd); new_kv: (B, ..., K, hd) matching
+    w_pos (B, ...) absolute positions.  Unmapped / cache-shared /
+    out-of-range positions resolve to the sentinel and drop on device —
+    the paged analogue of `prefill_suffix`'s mode="drop" scatter."""
+    n_pages, ps = cache_pool.shape[0], cache_pool.shape[1]
+    pps = write_table.shape[1]
+    slot_page = w_pos // ps                                  # (B, Q)
+    pid = jnp.take_along_axis(write_table,
+                              jnp.minimum(slot_page, pps - 1), axis=1)
+    pid = jnp.where(slot_page < pps, pid, n_pages)
+    return cache_pool.at[pid, w_pos % ps].set(
+        new_kv.astype(cache_pool.dtype), mode="drop")
+
+
+def decode_step_paged(params, cfg: ArchConfig, cache, token, pos,
+                      page_table, write_table, *, sh: Sharder = _id_sh):
+    """One decode step directly against the paged physical KV pool — no
+    gathered logical view.  token/pos: (B,) int32 as in `decode_step`;
+    page_table/write_table: (B, pps) int32 with sentinel == n_pages.
+    Paged leaves are the flat (L, n_pages, page_size, K, hd) pools;
+    constant-size leaves (ssm states, enc-dec cross KV) stay
+    slot-resident.  Returns (logits (B, V), new_cache).
+
+    Same family coverage as the paged engine (everything but xlstm);
+    quantized KV keeps the gather path — per-page scale layout isn't
+    paged yet.
+    """
+    if cfg.block == "xlstm" or "k_scale" in cache:
+        raise NotImplementedError(
+            "decode_step_paged: xlstm has no KV to page; quantized KV "
+            "uses the gather path")
+    b = token.shape[0]
+    h = jnp.take(params["embed"], token, axis=0)[:, None]      # (B,1,D)
+    flags = _is_global_flags(cfg) if cfg.block == "hymba" else None
+    prefix = cfg.n_meta_tokens + cfg.n_prefix_tokens
+    nkv = cfg.n_kv_heads
+
+    def layer(carry, xs):
+        h = carry
+        lp = xs["lp"]
+        kc, vc = xs["k"], xs["v"]                # (P, ps, K, hd) pools
+        hs = xs.get("ssm")
+        is_glob = xs.get("flag", cfg.swa_window == 0)
+        if isinstance(is_glob, bool):
+            window = 0 if is_glob else cfg.swa_window
+        else:
+            window = jnp.where(is_glob, 0, cfg.swa_window)
+        x = L.norm(h, lp.get("ln1"), cfg.norm)
+        q = jnp.einsum("bsd,dhk->bshk", x, lp["attn"]["wq"])
+        k_new = jnp.einsum("bsd,dhk->bshk", x, lp["attn"]["wk"])
+        v_new = jnp.einsum("bsd,dhk->bshk", x, lp["attn"]["wv"])
+        cos, sin = L.rope_cos_sin(pos[:, None], cfg.head_dim,
+                                  cfg.rope_theta)
+        q = L.apply_rope(q, cos, sin)
+        k_new = L.apply_rope(k_new, cos, sin)
+        kc = _paged_write(kc, k_new, write_table, pos[:, None])
+        vc = _paged_write(vc, v_new, write_table, pos[:, None])
+        ys = {"k": kc, "v": vc}
+        qf = q[:, 0].reshape(b, nkv, q.shape[2] // nkv, cfg.head_dim)
+        a_out = kernel_ops.paged_decode_attention(
+            qf, kc, vc, page_table, pos, window=window, prefix=prefix)
+        a_out = a_out.reshape(b, 1, q.shape[2], cfg.head_dim)
+        if cfg.block == "hymba":
+            inner = ssm_inner(cfg)
+            a_out = a_out.reshape(b, 1, inner)
+            s_out, hs_new = _hymba_ssm_step(lp["ssm"], cfg, x[:, 0], hs)
+            a_n = L.rms_norm(a_out, lp["branch_norm_attn"])
+            s_n = L.rms_norm(s_out[:, None], lp["branch_norm_ssm"])
+            comb = (lp["beta"][0] * a_n.astype(jnp.float32)
+                    + lp["beta"][1] * s_n.astype(jnp.float32)) * 0.5
+            h = h + jnp.einsum("bsi,id->bsd", comb.astype(h.dtype),
+                               lp["wo_comb"])
+            ys["ssm"] = hs_new
+        else:
+            h = h + jnp.einsum("bshk,hkd->bsd", a_out, lp["attn"]["wo"])
+        if cfg.is_encdec:
+            x = L.norm(h, lp.get("lnx"), cfg.norm)
+            cq = jnp.einsum("bsd,dhk->bshk", x, lp["xattn"]["wq"])
+            src_len = xs["ck"].shape[1]
+            c_out = attn_lib.decode_attention(
+                cq, xs["ck"], xs["cv"],
+                jnp.full((b,), src_len - 1, jnp.int32))
+            h = h + jnp.einsum("bshk,hkd->bsd", c_out, lp["xattn"]["wo"])
+        x = L.norm(h, lp.get("ln2"), cfg.norm)
+        f_out, _ = _ffn(lp, cfg, x, sh)
+        h = h + f_out
+        return h, ys
+
+    xs = {"lp": params["layers"], "k": cache["k"], "v": cache["v"]}
+    if flags is not None:
+        xs["ssm"] = cache["ssm_h"]
+        xs["flag"] = flags
+    if cfg.is_encdec:
+        xs["ck"], xs["cv"] = cache["ck"], cache["cv"]
+    h, ys = jax.lax.scan(layer, h, xs)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = ys["k"], ys["v"]
+    if cfg.block == "hymba":
+        new_cache["ssm_h"] = ys["ssm"]
+    h = L.norm(h, params.get("final_norm"), cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)[:, 0]
+    return logits, new_cache
+
+
+def spec_verify_paged(params, cfg: ArchConfig, cache, tokens, pos,
+                      page_table, write_table, *, sh: Sharder = _id_sh):
+    """Speculative-decoding verify: run Q = 1 + n_draft tokens per row in
+    one forward against the paged pool, causal by absolute position —
+    the multi-token generalization of `decode_step_paged`, exactly as
+    `prefill_suffix` generalizes `decode_step`.  tokens: (B, Q) — the
+    last accepted token followed by the draft chain; pos: (B,) absolute
+    position of tokens[:, 0].  KV for *every* fed position is written
+    through the write table (rejected drafts leave garbage beyond the
+    accepted position — masked by causality and overwritten when decode
+    resumes there).  Returns (logits (B, Q, V), new_cache).
+
+    Plain causal decoders only (recurrent state can't roll back a
+    rejected draft; windows/prefix/cross-KV change visibility) — the
+    engine gates speculation on the same predicate as the prefix cache.
+    """
+    if cfg.block in ("xlstm", "hymba") or cfg.is_encdec \
+            or cfg.swa_window or cfg.n_meta_tokens \
+            or cfg.n_prefix_tokens or "k_scale" in cache:
+        raise NotImplementedError(
+            "spec_verify_paged supports plain causal decoders only")
+    b, qn = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0)              # (B,Q,D)
+    q_pos = pos[:, None] + jnp.arange(qn)[None, :]             # (B,Q)
+
+    def layer(carry, xs):
+        h = carry
+        lp = xs["lp"]
+        kc, vc = xs["k"], xs["v"]
+        x = L.norm(h, lp.get("ln1"), cfg.norm)
+        q = jnp.einsum("bsd,dhk->bshk", x, lp["attn"]["wq"])
+        k_new = jnp.einsum("bsd,dhk->bshk", x, lp["attn"]["wk"])
+        v_new = jnp.einsum("bsd,dhk->bshk", x, lp["attn"]["wv"])
+        cos, sin = L.rope_cos_sin(q_pos, cfg.head_dim, cfg.rope_theta)
+        q = L.apply_rope(q, cos, sin)
+        k_new = L.apply_rope(k_new, cos, sin)
+        kc = _paged_write(kc, k_new, write_table, q_pos)
+        vc = _paged_write(vc, v_new, write_table, q_pos)
+        a_out = kernel_ops.paged_suffix_attention(q, kc, vc,
+                                                  page_table, q_pos)
+        h = h + jnp.einsum("bshk,hkd->bsd", a_out, lp["attn"]["wo"])
+        x = L.norm(h, lp.get("ln2"), cfg.norm)
+        f_out, _ = _ffn(lp, cfg, x, sh)
+        h = h + f_out
+        return h, {"k": kc, "v": vc}
+
+    xs = {"lp": params["layers"], "k": cache["k"], "v": cache["v"]}
+    h, ys = jax.lax.scan(layer, h, xs)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = ys["k"], ys["v"]
+    h = L.norm(h, params.get("final_norm"), cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
     return logits, new_cache

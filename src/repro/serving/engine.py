@@ -62,6 +62,7 @@ from repro.serving.request import (CODE_ENGINE_FAILED, CODE_INVALID_REQUEST,
                                    Request, RequestState)
 from repro.serving.sampler import sample_batched
 from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.serving import spec_decode as spec_lib
 
 
 @dataclasses.dataclass
@@ -83,6 +84,12 @@ class EngineConfig:
     prefix_cache_pages: int = 0   # device pages the cache may pin; 0 => no cap
     host_kv_pages: int = 0        # host-DRAM swap-tier pages; 0 => off
     prefix_share_tenants: bool = False  # share prefix blocks across tenants
+    # paged attention + on-device speculative decoding
+    paged_attention: bool = False  # attend through the page table (no
+    #                                per-dispatch gather/scatter copy)
+    speculative: bool = False     # n-gram propose + batched greedy verify
+    spec_draft: int = 4           # draft tokens proposed per verify
+    spec_table: int = 512         # proposer hash-table buckets (pow2)
 
 
 class EngineFailure(RuntimeError):
@@ -137,6 +144,15 @@ class InferenceEngine:
                            and not cfg.is_encdec
                            and self._prefix_tokens == 0
                            and getattr(cfg, "swa_window", 0) == 0)
+        # page-table-direct attention: any paged family (recurrent state
+        # and enc-dec cross KV stay slot-resident either way)
+        self._paged_attn = engine_cfg.paged_attention and self._paged
+        # speculative decoding needs the paged-attention verify path and
+        # a plain causal decoder (rejected drafts must be erasable by
+        # overwrite: recurrent state can't roll back, windows/prefix
+        # change visibility) — the same predicate as the prefix cache
+        self._spec_ok = (engine_cfg.speculative and self._paged_attn
+                         and self._prefix_ok)
         self.host_pool = (HostPagePool(engine_cfg.host_kv_pages)
                           if engine_cfg.host_kv_pages > 0 and self._paged
                           else None)
@@ -169,6 +185,29 @@ class InferenceEngine:
         self.top_ks = jnp.zeros((ns,), jnp.int32)
         self.top_ps = jnp.ones((ns,), jnp.float32)
         self.eos_ids = jnp.full((ns,), -1, jnp.int32)
+        # speculative-decoding device state: per-slot bigram proposer
+        # table plus the token *preceding* last_tok (the chain seed) —
+        # wiped on admission/release so a reused slot never proposes
+        # from another request's stream
+        self.spec_table, self.spec_prev = spec_lib.init_tables(
+            ns, engine_cfg.spec_table)
+        # logical KV bytes one fused dispatch moves: the gather path
+        # copies every slot's logical view out and back (2x view); the
+        # page-table path only writes K new tokens' KV in place
+        self._view_bytes = 0
+        self._write_token_bytes = 0     # all-slot KV write bytes, 1 step
+        if self._paged:
+            for leaf in split_paged(self.cache)[0].values():
+                per_tok = (leaf.dtype.itemsize * leaf.shape[0]
+                           * int(np.prod(leaf.shape[3:])))
+                self._view_bytes += (per_tok * ns * self.pool.pages_per_slot
+                                     * self.pool.page_size)
+                self._write_token_bytes += per_tok * ns
+        # decode-boundary page growth must also cover a verify's D+1
+        # in-flight writes when speculation is live
+        self._growth = max(engine_cfg.decode_block,
+                           engine_cfg.spec_draft + 1) if self._spec_ok \
+            else engine_cfg.decode_block
         # metrics
         self.total_tokens = 0
         self.total_steps = 0
@@ -183,6 +222,12 @@ class InferenceEngine:
         self.suffix_prefills = 0  # rows admitted via cached-prefix suffix
         self.swap_outs = 0        # slots parked to the host tier
         self.swap_ins = 0         # slots restored with zero re-prefill
+        # paged-attention / speculative-decoding counters
+        self.logical_bytes_moved = 0   # KV bytes copied/written per decode
+        self.spec_traces = 0      # compile-cache counter: verify dispatch
+        self.spec_dispatches = 0  # verify dispatches issued
+        self.spec_emitted = 0     # tokens emitted by verify dispatches
+        self.spec_slot_accepted = np.zeros((ns,), np.int64)  # drafts/slot
         self._build_steps()
 
     # ------------------------------------------------------------- #
@@ -229,11 +274,14 @@ class InferenceEngine:
     def _build_steps(self):
         model, ecfg = self.model, self.ecfg
         paged = self._paged
+        paged_attn = self._paged_attn
 
         def prefill_admit(params, cache, last_tok, pos, active, remaining,
                           temps, top_ks, top_ps, eos_ids, key,
+                          spec_table, spec_prev,
                           tokens, lengths, slots, row_pages,
-                          r_temps, r_topk, r_topp, r_eos, r_budget, extra):
+                          r_temps, r_topk, r_topp, r_eos, r_budget,
+                          r_prev, extra):
             # Python side effect fires at trace time only: counts compiles
             self.prefill_traces += 1
             p = self._dequant(params)
@@ -268,8 +316,13 @@ class InferenceEngine:
             top_ks = top_ks.at[slots].set(r_topk, mode="drop")
             top_ps = top_ps.at[slots].set(r_topp, mode="drop")
             eos_ids = eos_ids.at[slots].set(r_eos, mode="drop")
+            # fresh proposer state: wipe the slot's table row and seed
+            # the bigram chain from the last context token
+            spec_table = spec_table.at[slots].set(-1, mode="drop")
+            spec_prev = spec_prev.at[slots].set(r_prev, mode="drop")
             return (cache, last_tok, pos, active, remaining, temps,
-                    top_ks, top_ps, eos_ids, key, first, done0)
+                    top_ks, top_ps, eos_ids, key, spec_table, spec_prev,
+                    first, done0)
 
         def make_fused_decode(mode: str):
             # "greedy": every slot argmax — no PRNG, no sorts.
@@ -280,17 +333,25 @@ class InferenceEngine:
                              key, page_table, write_table):
                 self.decode_traces += 1
                 p = self._dequant(params)
-                if paged:
+                if paged and not paged_attn:
                     pool_p, pool_r = split_paged(cache)
                     # one gather per dispatch materializes every slot's
                     # logical view through its page table
                     view = {**gather_pages(pool_p, page_table), **pool_r}
                 else:
+                    # page-table-direct attention (or contiguous strips):
+                    # the physical cache is the working view — no copy
                     view = cache
 
                 def body(carry, _):
                     view, last_tok, pos, active, remaining, key = carry
-                    logits, view = model.decode(p, view, last_tok, pos)
+                    if paged_attn:
+                        logits, view = model.decode_paged(
+                            p, view, last_tok, pos, page_table,
+                            write_table)
+                    else:
+                        logits, view = model.decode(p, view, last_tok,
+                                                    pos)
                     if mode == "greedy":
                         sampled = jnp.argmax(logits, axis=-1) \
                             .astype(jnp.int32)
@@ -318,7 +379,7 @@ class InferenceEngine:
                 carry, (toks, emits, dones) = jax.lax.scan(
                     body, init, None, length=ecfg.decode_block)
                 view, last_tok, pos, active, remaining, key = carry
-                if paged:
+                if paged and not paged_attn:
                     view_p, view_r = split_paged(view)
                     # one scatter per dispatch lands the block's writes
                     # back in the physical page pool — through the
@@ -334,9 +395,10 @@ class InferenceEngine:
 
         def suffix_admit(params, cache, last_tok, pos, active, remaining,
                          temps, top_ks, top_ps, eos_ids, key,
+                         spec_table, spec_prev,
                          tokens, offsets, lengths, slots, read_tables,
                          write_tables, r_temps, r_topk, r_topp, r_eos,
-                         r_budget):
+                         r_budget, r_prev):
             """Prefix-cache hit admission: gather each row's logical view
             through its *full* page table (shared prefix + private
             pages), run the suffix-only forward, and scatter back through
@@ -364,12 +426,17 @@ class InferenceEngine:
             top_ks = top_ks.at[slots].set(r_topk, mode="drop")
             top_ps = top_ps.at[slots].set(r_topp, mode="drop")
             eos_ids = eos_ids.at[slots].set(r_eos, mode="drop")
+            spec_table = spec_table.at[slots].set(-1, mode="drop")
+            spec_prev = spec_prev.at[slots].set(r_prev, mode="drop")
             return (cache, last_tok, pos, active, remaining, temps,
-                    top_ks, top_ps, eos_ids, key, first, done0)
+                    top_ks, top_ps, eos_ids, key, spec_table, spec_prev,
+                    first, done0)
 
         def restore_slots(last_tok, pos, active, remaining, temps,
-                          top_ks, top_ps, eos_ids, slots, r_last, r_pos,
-                          r_budget, r_temps, r_topk, r_topp, r_eos):
+                          top_ks, top_ps, eos_ids, spec_table, spec_prev,
+                          slots, r_last, r_pos,
+                          r_budget, r_temps, r_topk, r_topp, r_eos,
+                          r_prev):
             """Swap-in resume: rebuild per-slot decode state host-known
             at park time — no model forward, zero re-prefill.  Padded
             rows carry slot == n_slots and drop on device."""
@@ -381,26 +448,83 @@ class InferenceEngine:
             top_ks = top_ks.at[slots].set(r_topk, mode="drop")
             top_ps = top_ps.at[slots].set(r_topp, mode="drop")
             eos_ids = eos_ids.at[slots].set(r_eos, mode="drop")
+            spec_table = spec_table.at[slots].set(-1, mode="drop")
+            spec_prev = spec_prev.at[slots].set(r_prev, mode="drop")
             return (last_tok, pos, active, remaining, temps, top_ks,
-                    top_ps, eos_ids)
+                    top_ps, eos_ids, spec_table, spec_prev)
 
-        def clear_slots(last_tok, pos, active, remaining, temps, slots):
+        def clear_slots(last_tok, pos, active, remaining, temps,
+                        spec_table, spec_prev, slots):
             """Release/cancel/preempt: wipe per-slot device state so a
             freed slot can never be decoded or sampled with stale
-            values."""
+            values — including the speculative proposer row and chain
+            seed, so un-verified drafts from a cancelled request can
+            never be proposed into a reused slot."""
             last_tok = last_tok.at[slots].set(0, mode="drop")
             pos = pos.at[slots].set(0, mode="drop")
             active = active.at[slots].set(False, mode="drop")
             remaining = remaining.at[slots].set(0, mode="drop")
             temps = temps.at[slots].set(0.0, mode="drop")
-            return last_tok, pos, active, remaining, temps
+            spec_table = spec_table.at[slots].set(-1, mode="drop")
+            spec_prev = spec_prev.at[slots].set(-1, mode="drop")
+            return (last_tok, pos, active, remaining, temps, spec_table,
+                    spec_prev)
+
+        def spec_decode(params, cache, last_tok, pos, active, remaining,
+                        eos_ids, spec_table, spec_prev, page_table,
+                        write_table):
+            """One speculative step: propose D drafts from the bigram
+            table, verify [last_tok, drafts] in ONE batched paged
+            forward, emit the longest greedy-matching prefix plus the
+            verifier's own next token.  Greedy-only (the host picks
+            this path only for all-greedy batches), so emitted tokens
+            are provably identical to sequential greedy decode.  Same
+            shape discipline as fused_decode: returns (D+1, n_slots)
+            token/emit/done blocks consumed by the same host tail."""
+            self.spec_traces += 1
+            p = self._dequant(params)
+            d = ecfg.spec_draft
+            drafts = spec_lib.propose(spec_table, spec_prev, last_tok, d)
+            # missing proposals (-1) are fed as token 0 but can never be
+            # accepted: a -1 draft never equals a real argmax token
+            x = jnp.concatenate(
+                [last_tok[:, None], jnp.maximum(drafts, 0)], axis=1)
+            logits, cache = model.verify_paged(
+                p, cache, x, pos, page_table, write_table)
+            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            n_acc = spec_lib.accept_length(drafts, greedy[:, :d])
+
+            def body(carry, xs):
+                g_i, i = xs
+                last_c, prev_c, pos_c, act_c, rem_c, tab = carry
+                emit = act_c & (i <= n_acc)
+                tok = jnp.where(emit, g_i, last_c)
+                rem_c = jnp.where(emit, rem_c - 1, rem_c)
+                pos_c = pos_c + emit.astype(jnp.int32)
+                done = emit & (((eos_ids >= 0) & (tok == eos_ids))
+                               | (rem_c <= 0)
+                               | (pos_c >= self._pos_limit))
+                # the table learns each emitted transition on device
+                tab = spec_lib.record(tab, prev_c, last_c, tok, emit)
+                prev_c = jnp.where(emit, last_c, prev_c)
+                carry = (tok, prev_c, pos_c, act_c & ~done, rem_c, tab)
+                return carry, (tok, emit, done)
+
+            init = (last_tok, spec_prev, pos, active, remaining,
+                    spec_table)
+            carry, (toks, emits, dones) = jax.lax.scan(
+                body, init, (greedy.T, jnp.arange(d + 1)))
+            last_tok, spec_prev, pos, active, remaining, spec_table = \
+                carry
+            return (cache, last_tok, pos, active, remaining, spec_table,
+                    spec_prev, toks, emits, dones)
 
         self._prefill_admit = jax.jit(
-            prefill_admit, donate_argnums=tuple(range(1, 11)))
+            prefill_admit, donate_argnums=tuple(range(1, 13)))
         self._suffix_admit = jax.jit(
-            suffix_admit, donate_argnums=tuple(range(1, 11)))
+            suffix_admit, donate_argnums=tuple(range(1, 13)))
         self._restore_slots = jax.jit(
-            restore_slots, donate_argnums=tuple(range(8)))
+            restore_slots, donate_argnums=tuple(range(10)))
         decode_donate = (1, 2, 3, 4, 5, 10)
         # three variants; jax compiles each lazily on first use only
         self._fused_decode = {
@@ -408,7 +532,9 @@ class InferenceEngine:
                           donate_argnums=decode_donate)
             for mode in ("greedy", "temp", "full")}
         self._clear_slots = jax.jit(
-            clear_slots, donate_argnums=(0, 1, 2, 3, 4))
+            clear_slots, donate_argnums=tuple(range(7)))
+        self._spec_decode = jax.jit(
+            spec_decode, donate_argnums=(1, 2, 3, 4, 5, 7, 8))
 
     # ------------------------------------------------------------- #
     def _extra_inputs(self, batch: int):
@@ -492,9 +618,9 @@ class InferenceEngine:
         sample it with stale values."""
         idx = jnp.asarray([slot], jnp.int32)
         (self.last_tok, self.pos, self.active, self.remaining,
-         self.temps) = self._clear_slots(
+         self.temps, self.spec_table, self.spec_prev) = self._clear_slots(
             self.last_tok, self.pos, self.active, self.remaining,
-            self.temps, idx)
+            self.temps, self.spec_table, self.spec_prev, idx)
         self.dispatches += 1
 
     @property
@@ -535,7 +661,7 @@ class InferenceEngine:
             return 0
         debt = 0
         for slot in self.slot_req:
-            target = min(self.pool.lengths[slot] + self.ecfg.decode_block,
+            target = min(self.pool.lengths[slot] + self._growth,
                          self.ecfg.max_len)
             debt += max(self.pool.pages_for_tokens(target)
                         - len(self.pool.slot_pages[slot]), 0)
@@ -629,6 +755,7 @@ class InferenceEngine:
         r_topp = np.ones((pad_n,), np.float32)
         r_eos = np.full((pad_n,), -1, np.int32)
         r_budget = np.ones((pad_n,), np.int32)
+        r_prev = np.full((pad_n,), -1, np.int32)
         for i, (slot, req) in enumerate(admitted):
             prompt = list(req.prompt) + list(req.output)   # resume ctx
             pl = len(prompt)
@@ -642,14 +769,17 @@ class InferenceEngine:
             r_topp[i] = s.top_p if s.top_p < 1.0 else ecfg.top_p
             r_eos[i] = s.eos_id
             r_budget[i] = s.max_tokens - len(req.output)
+            r_prev[i] = prompt[-1]      # precedes the sampled first token
         extra = self._extra_inputs(pad_n)
         (self.cache, self.last_tok, self.pos, self.active, self.remaining,
          self.temps, self.top_ks, self.top_ps, self.eos_ids, self._key,
+         self.spec_table, self.spec_prev,
          first, done0) = self._prefill_admit(
             self.params, self.cache, self.last_tok, self.pos, self.active,
             self.remaining, self.temps, self.top_ks, self.top_ps,
-            self.eos_ids, self._key, toks, lengths, slots, row_pages,
-            r_temps, r_topk, r_topp, r_eos, r_budget, extra)
+            self.eos_ids, self._key, self.spec_table, self.spec_prev,
+            toks, lengths, slots, row_pages,
+            r_temps, r_topk, r_topp, r_eos, r_budget, r_prev, extra)
         self.dispatches += 1
         self.prefill_dispatch_tokens += pad_n * bucket
         first_h, done_h = jax.device_get((first, done0))
@@ -720,8 +850,10 @@ class InferenceEngine:
         r_topp = np.ones((pad_n,), np.float32)
         r_eos = np.full((pad_n,), -1, np.int32)
         r_budget = np.ones((pad_n,), np.int32)
+        r_prev = np.full((pad_n,), -1, np.int32)
         for i, (slot, req) in enumerate(admitted):
             prompt = list(req.prompt) + list(req.output)
+            r_prev[i] = prompt[-1]
             matched = matched_of[slot]
             suffix = prompt[matched:]
             toks[i, :len(suffix)] = suffix
@@ -741,13 +873,19 @@ class InferenceEngine:
             r_budget[i] = s.max_tokens - len(req.output)
         (self.cache, self.last_tok, self.pos, self.active, self.remaining,
          self.temps, self.top_ks, self.top_ps, self.eos_ids, self._key,
+         self.spec_table, self.spec_prev,
          first, done0) = self._suffix_admit(
             self.params, self.cache, self.last_tok, self.pos, self.active,
             self.remaining, self.temps, self.top_ks, self.top_ps,
-            self.eos_ids, self._key, toks, offsets, lengths, slots,
+            self.eos_ids, self._key, self.spec_table, self.spec_prev,
+            toks, offsets, lengths, slots,
             read_tables, write_tables, r_temps, r_topk, r_topp, r_eos,
-            r_budget)
+            r_budget, r_prev)
         self.dispatches += 1
+        if self._paged:
+            # admission gathers/scatters one logical view per padded row
+            self.logical_bytes_moved += \
+                2 * (self._view_bytes // self.ecfg.n_slots) * pad_n
         self.prefill_dispatch_tokens += pad_n * bucket
         self.suffix_prefills += len(admitted)
         first_h, done_h = jax.device_get((first, done0))
@@ -789,9 +927,12 @@ class InferenceEngine:
         r_topk = np.zeros((pad_n,), np.int32)
         r_topp = np.ones((pad_n,), np.float32)
         r_eos = np.full((pad_n,), -1, np.int32)
+        r_prev = np.full((pad_n,), -1, np.int32)
         for i, (slot, req) in enumerate(restored):
             slots[i] = slot
             r_last[i] = req.output[-1]
+            r_prev[i] = req.output[-2] if len(req.output) >= 2 \
+                else list(req.prompt)[-1]
             r_pos[i] = self.pool.lengths[slot]
             r_budget[i] = req.sampling.max_tokens - len(req.output)
             s = req.sampling
@@ -802,11 +943,13 @@ class InferenceEngine:
             req.state = RequestState.DECODING
             self.slot_req[slot] = req
         (self.last_tok, self.pos, self.active, self.remaining, self.temps,
-         self.top_ks, self.top_ps, self.eos_ids) = self._restore_slots(
+         self.top_ks, self.top_ps, self.eos_ids, self.spec_table,
+         self.spec_prev) = self._restore_slots(
             self.last_tok, self.pos, self.active, self.remaining,
             self.temps, self.top_ks, self.top_ps, self.eos_ids,
+            self.spec_table, self.spec_prev,
             slots, r_last, r_pos, r_budget, r_temps, r_topk, r_topp,
-            r_eos)
+            r_eos, r_prev)
         self.dispatches += 1
 
     def _decode_mode(self) -> str:
@@ -869,7 +1012,7 @@ class InferenceEngine:
         one full sequence's pages)."""
         if not self._paged:
             return
-        k = self.ecfg.decode_block
+        k = self._growth
         for slot in sorted(self.slot_req):
             if slot not in self.slot_req:      # evicted by a prior pass
                 continue
@@ -886,13 +1029,36 @@ class InferenceEngine:
         self._ensure_decode_pages()
         if not self.slot_req:
             return 0
-        fn = self._fused_decode[self._decode_mode()]
-        (self.cache, self.last_tok, self.pos, self.active, self.remaining,
-         self._key, toks, emits, dones) = fn(
-            self.params, self.cache, self.last_tok, self.pos,
-            self.active, self.remaining, self.temps, self.top_ks,
-            self.top_ps, self.eos_ids, self._key,
-            self.pool.page_table(), self.pool.write_table())
+        mode = self._decode_mode()
+        spec = self._spec_ok and mode == "greedy"
+        if spec:
+            # one verify dispatch proposes + checks D drafts and emits
+            # up to D+1 tokens — same single host sync as the fused path
+            (self.cache, self.last_tok, self.pos, self.active,
+             self.remaining, self.spec_table, self.spec_prev,
+             toks, emits, dones) = self._spec_decode(
+                self.params, self.cache, self.last_tok, self.pos,
+                self.active, self.remaining, self.eos_ids,
+                self.spec_table, self.spec_prev,
+                self.pool.page_table(), self.pool.write_table())
+            self.spec_dispatches += 1
+            self.logical_bytes_moved += \
+                (self.ecfg.spec_draft + 1) * self._write_token_bytes
+        else:
+            fn = self._fused_decode[mode]
+            (self.cache, self.last_tok, self.pos, self.active,
+             self.remaining, self._key, toks, emits, dones) = fn(
+                self.params, self.cache, self.last_tok, self.pos,
+                self.active, self.remaining, self.temps, self.top_ks,
+                self.top_ps, self.eos_ids, self._key,
+                self.pool.page_table(), self.pool.write_table())
+            if self._paged_attn:
+                # page-table-direct: only the block's new KV is written
+                self.logical_bytes_moved += \
+                    self.ecfg.decode_block * self._write_token_bytes
+            elif self._paged:
+                # gather + scatter move every slot's full logical view
+                self.logical_bytes_moved += 2 * self._view_bytes
         self.dispatches += 1
         toks_h, emit_h, done_h = jax.device_get((toks, emits, dones))
         self.host_syncs += 1
@@ -906,6 +1072,10 @@ class InferenceEngine:
             self.pool.advance(slot, len(block))
             emitted += len(block)
             self.total_tokens += len(block)
+            if spec:
+                self.spec_emitted += len(block)
+                # tokens beyond the first came from accepted drafts
+                self.spec_slot_accepted[slot] += max(len(block) - 1, 0)
             if done_h[:, slot].any():
                 req.finish()
                 del self.slot_req[slot]
@@ -963,6 +1133,19 @@ class InferenceEngine:
             "decode_traces": self.decode_traces,
             "decode_block": self.ecfg.decode_block,
             "paged": self._paged,
+            "paged_attention": self._paged_attn,
+            "speculative": self._spec_ok,
+            # logical KV traffic: gather/scatter views vs in-place writes
+            "logical_bytes_moved": self.logical_bytes_moved,
+            "logical_bytes_moved_per_token": self.logical_bytes_moved / t,
+            # speculative decoding acceptance
+            "spec_traces": self.spec_traces,
+            "spec_dispatches": self.spec_dispatches,
+            "spec_emitted": self.spec_emitted,
+            "spec_accepted_per_dispatch": (
+                self.spec_emitted / self.spec_dispatches
+                if self.spec_dispatches else 0.0),
+            "spec_slot_accepted": self.spec_slot_accepted.tolist(),
             "preemptions": self.preemptions,
             "queue_enqueued": self.scheduler.enqueued_total,
             "queue_dequeued": self.scheduler.dequeued_total,

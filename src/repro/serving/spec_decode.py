@@ -1,0 +1,90 @@
+"""On-device n-gram speculative decoding: proposer tables + accept logic.
+
+The proposer is a per-slot *bigram suffix-hash table*: a flat
+``(n_slots, table_size)`` int32 array mapping ``hash(prev, last)`` to the
+token that followed that pair most recently in the slot's own emitted
+stream.  Everything is device-resident and O(1) per token:
+
+* ``propose`` chains D lookups from the slot's last two emitted tokens
+  to build a draft sequence (a missing entry yields -1, which can never
+  match a real greedy token — the chain degrades to "no proposal" and
+  verify costs exactly one dispatch, same as a fused K=1 step).
+* ``record`` learns one (prev, last) -> next transition per emitted
+  token.  Writes go through ``mode="drop"`` with the index masked to the
+  sentinel for invalid rows, so padded/inactive slots never dirty the
+  table.
+
+Greedy verify accepts the longest prefix of drafts matching the batched
+forward's own argmax — by induction the emitted stream is *provably
+identical* to non-speculative greedy decoding: token i+1 is only
+emitted when draft i equals exactly what greedy would have sampled at
+that position, so every accepted position reproduces the sequential
+trajectory, and the first mismatch position emits the verifier's own
+argmax (what sequential decoding would have produced) and stops.
+
+Collisions are harmless for correctness (a wrong table entry is just a
+bad draft — rejected by verify) and rare at the default 512-entry
+table; the multiplicative hash is Knuth's 2654435761 with an odd-salt
+mix of the second key.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_MUL_A = 2654435761      # Knuth multiplicative hash constants
+_MUL_B = 40503
+_SALT = 2654435769
+
+
+def init_tables(n_slots: int, table_size: int):
+    """Fresh proposer state: (table (n_slots, T) int32 = -1,
+    prev (n_slots,) int32 = -1).  T must be a power of two."""
+    assert table_size & (table_size - 1) == 0, "table size: power of two"
+    return (jnp.full((n_slots, table_size), -1, jnp.int32),
+            jnp.full((n_slots,), -1, jnp.int32))
+
+
+def ngram_hash(a, b, table_size: int):
+    """Bigram bucket: hash(a, b) & (T - 1).  a/b: int32 arrays."""
+    ua = a.astype(jnp.uint32) * jnp.uint32(_MUL_A)
+    ub = b.astype(jnp.uint32) * jnp.uint32(_MUL_B) + jnp.uint32(_SALT)
+    return ((ua ^ ub) & jnp.uint32(table_size - 1)).astype(jnp.int32)
+
+
+def propose(table, prev, last, n_draft: int):
+    """Chain D bigram lookups into a draft sequence.
+
+    table: (B, T); prev/last: (B,) — the two most recent emitted tokens
+    (-1 when unknown).  Returns drafts (B, n_draft) int32 with -1 for
+    "no proposal" (guaranteed to be rejected by greedy verify).
+    """
+    b, t = table.shape
+    rows = jnp.arange(b)
+    drafts = jnp.full((b, n_draft), -1, jnp.int32)
+    a, c = prev, last
+    for i in range(n_draft):
+        h = ngram_hash(a, c, t)
+        nxt = table[rows, h]
+        nxt = jnp.where((a < 0) | (c < 0), -1, nxt)
+        drafts = drafts.at[:, i].set(nxt)
+        a, c = c, nxt
+    return drafts
+
+
+def record(table, prev, last, nxt, valid):
+    """Learn one transition per row: table[hash(prev, last)] = nxt where
+    `valid` (and all three tokens are real).  Invalid rows scatter to
+    the sentinel column and drop."""
+    b, t = table.shape
+    h = ngram_hash(prev, last, t)
+    ok = valid & (prev >= 0) & (last >= 0) & (nxt >= 0)
+    idx = jnp.where(ok, h, t)
+    return table.at[jnp.arange(b), idx].set(nxt, mode="drop")
+
+
+def accept_length(drafts, greedy):
+    """Longest matching prefix length: drafts (B, D) vs the verifier's
+    greedy tokens at the same positions (B, D).  Returns (B,) int32 in
+    [0, D] — position i is accepted iff drafts[:, :i+1] all matched."""
+    match = (drafts == greedy).astype(jnp.int32)
+    return jnp.sum(jnp.cumprod(match, axis=1), axis=1)

@@ -1,0 +1,169 @@
+"""Engine-level paged-attention parity: the page-table-direct decode
+kernel must be a pure memory optimization — greedy outputs token-identical
+to the gather/scatter path at every fused-block size, across prefix-cache
+COW sharing, host-swap resume, sentinel-padded tables, and preemption —
+while moving >= 2x fewer logical KV bytes per token at identical
+dispatch/sync counts."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.serving import (EngineConfig, InferenceEngine, Request,
+                           SamplingParams)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return ARCHS["olmo-1b"].reduced()
+
+
+@pytest.fixture(scope="module")
+def params(cfg, param_store):
+    return param_store(cfg)
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("n_slots", 4)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("page_size", 8)
+    return InferenceEngine(cfg, params, EngineConfig(**kw))
+
+
+def _run(eng, reqs, max_steps=10_000):
+    for r in reqs:
+        assert eng.submit(r)
+    eng.run_until_done(max_steps)
+    return [tuple(r.output) for r in reqs]
+
+
+def _serial(eng, prompts, max_tokens=8):
+    outs = []
+    for p in prompts:
+        r = Request(model="m", prompt=list(p),
+                    sampling=SamplingParams(max_tokens=max_tokens))
+        assert eng.submit(r)
+        eng.run_until_done()
+        outs.append(tuple(r.output))
+    return outs
+
+
+def _work(n=5, max_tokens=10):
+    return [Request(model="m", prompt=list(range(1, 2 + i)),
+                    sampling=SamplingParams(max_tokens=max_tokens + i))
+            for i in range(n)]
+
+
+SHARED = list(range(1, 25))            # 24 tokens = 3 pages at size 8
+
+
+# ------------------- greedy parity --------------------------------- #
+@pytest.mark.parametrize("k", [1, 4, 8])
+def test_paged_attention_greedy_parity(cfg, params, k):
+    """Token-for-token identical outputs with the kernel on and off at
+    every fused-block size — short prompts leave most of each slot's
+    page table at the OOB sentinel, so padded tables are exercised on
+    every dispatch."""
+    ref = _run(_engine(cfg, params, decode_block=k), _work())
+    eng = _engine(cfg, params, decode_block=k, paged_attention=True)
+    assert _run(eng, _work()) == ref
+    assert eng.perf_stats()["paged_attention"]
+
+
+def test_dispatch_and_sync_counts_unchanged(cfg, params):
+    """The kernel changes what a dispatch reads, never how many
+    dispatches or host syncs a token costs."""
+    a = _engine(cfg, params, decode_block=4)
+    _run(a, _work())
+    b = _engine(cfg, params, decode_block=4, paged_attention=True)
+    _run(b, _work())
+    sa, sb = a.perf_stats(), b.perf_stats()
+    assert sa["dispatches"] == sb["dispatches"]
+    assert sa["host_syncs"] == sb["host_syncs"]
+    assert sa["tokens"] == sb["tokens"]
+
+
+def test_logical_bytes_reduced_2x(cfg, params):
+    """The point of the kernel: >= 2x fewer logical KV bytes per token
+    than gather/scatter on a decode-heavy workload."""
+    a = _engine(cfg, params, decode_block=4)
+    _run(a, _work(max_tokens=20))
+    b = _engine(cfg, params, decode_block=4, paged_attention=True)
+    _run(b, _work(max_tokens=20))
+    sa, sb = a.perf_stats(), b.perf_stats()
+    assert sa["logical_bytes_moved"] > 0
+    assert sb["logical_bytes_moved"] > 0
+    ratio = (sa["logical_bytes_moved_per_token"]
+             / sb["logical_bytes_moved_per_token"])
+    assert ratio >= 2.0, ratio
+
+
+# ------------------- prefix cache / COW sharing -------------------- #
+@pytest.mark.parametrize("k", [1, 4])
+def test_parity_with_cow_shared_pages(cfg, params, k):
+    """Slots whose tables map refcounted cache-shared prefix pages read
+    them through the kernel exactly as the gathered view did — and the
+    write-table sentinel keeps those pages immutable."""
+    prompts = [SHARED + [30, 31],          # cold: populates the cache
+               SHARED + [40, 41, 42],      # full 3-page hit
+               SHARED[:12] + [7]]          # partial 1-page hit
+    ref = _serial(_engine(cfg, params, decode_block=k,
+                          prefix_cache=True), prompts)
+    eng = _engine(cfg, params, decode_block=k, prefix_cache=True,
+                  paged_attention=True)
+    assert _serial(eng, prompts) == ref
+    assert eng.suffix_prefills >= 2        # hits actually shared pages
+    # shared pages were never dirtied: the same hits replay identically
+    assert _serial(eng, prompts[1:]) == ref[1:]
+
+
+# ------------------- swap resume / preemption ---------------------- #
+@pytest.mark.parametrize("k", [1, 4])
+def test_parity_across_swap_resume(cfg, params, k):
+    """Preempted slots park on host DRAM and resume into *different*
+    physical pages; the kernel must follow the rebuilt page table."""
+    def contended():
+        return [Request(model="m", prompt=list(range(1, 3 + i)),
+                        sampling=SamplingParams(max_tokens=20))
+                for i in range(6)]
+    base = _engine(cfg, params, n_slots=6, kv_pages=18, decode_block=k)
+    ref = _run(base, contended())
+    assert base.preemptions >= 1           # contention actually happened
+    eng = _engine(cfg, params, n_slots=6, kv_pages=18, decode_block=k,
+                  host_kv_pages=64, paged_attention=True)
+    assert _run(eng, contended()) == ref
+    assert eng.swap_ins >= 1               # kernel ran over swapped-in KV
+    assert eng.pool.pages_in_use == 0
+
+
+def test_cancel_midflight_then_reuse_slot(cfg, params):
+    """Cancelling an active request under the kernel releases its pages
+    and the reused slot decodes a fresh request identically to an
+    uncontended engine."""
+    eng = _engine(cfg, params, n_slots=2, decode_block=2,
+                  paged_attention=True)
+    victim = Request(model="m", prompt=[1, 2, 3],
+                     sampling=SamplingParams(max_tokens=30))
+    assert eng.submit(victim)
+    eng.step()
+    assert eng.slot_req                    # admitted and decoding
+    assert eng.cancel(victim.request_id) == "active"
+    fresh = Request(model="m", prompt=[4, 5],
+                    sampling=SamplingParams(max_tokens=6))
+    assert eng.submit(fresh)
+    eng.run_until_done()
+    ref = _run(_engine(cfg, params, n_slots=2, decode_block=2),
+               [Request(model="m", prompt=[4, 5],
+                        sampling=SamplingParams(max_tokens=6))])
+    assert [tuple(fresh.output)] == ref
+
+
+# ------------------- admin surface --------------------------------- #
+def test_perf_stats_surface(cfg, params):
+    eng = _engine(cfg, params, decode_block=4, paged_attention=True)
+    _run(eng, _work(n=2))
+    st = eng.perf_stats()
+    assert st["paged_attention"] is True
+    assert st["speculative"] is False
+    assert st["logical_bytes_moved_per_token"] > 0
+    assert st["spec_dispatches"] == 0
+    assert np.asarray(st["spec_slot_accepted"]).sum() == 0
